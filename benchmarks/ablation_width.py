@@ -1,0 +1,55 @@
+"""Ablation: bucket width W vs recall for MP-RW-LSH (beyond-paper).
+
+The paper tunes (M, W) per dataset by search (Sect. 5.2).  This ablation
+shows the structural rule our harness uses instead: the raw-hash difference
+std at the near radius is sqrt(d1) (random-walk CLT, paper Sect. 3.1), so
+recall peaks when W is a small multiple of sqrt(dbar1) — we sweep the
+multiple c in W = c*sqrt(dbar1).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core.index import IndexConfig, build_index, query_index
+from repro.data import ann_synthetic as ds
+
+
+def run(k: int = 10, n_queries: int = 48):
+    spec = ds.DatasetSpec("ablate", n=16384, dim=64, universe=256,
+                          num_clusters=24, seed=5)
+    data = jnp.asarray(ds.make_dataset(spec))
+    queries = jnp.asarray(ds.make_queries(spec, np.asarray(data), n_queries))
+    td, ti = bl.brute_force_l1(data, queries, k)
+    ti = np.asarray(ti)
+    dbar = float(np.asarray(td, np.float64).mean())
+    root = np.sqrt(dbar)
+    rows = []
+    for c in (1.0, 2.0, 3.0, 4.0, 6.0, 10.0):
+        w = max(8, int(c * root) & ~1)
+        cfg = IndexConfig(num_tables=6, num_hashes=12, width=w, num_probes=150,
+                          candidate_cap=96, universe=spec.universe, k=k,
+                          rerank_chunk=1024)
+        st = build_index(cfg, jax.random.PRNGKey(0), data)
+        _, i = query_index(cfg, st, queries)
+        rows.append((c, w, bl.recall(np.asarray(i), ti)))
+    return dbar, rows
+
+
+def main():
+    t0 = time.time()
+    dbar, rows = run()
+    us = (time.time() - t0) * 1e6
+    best = max(rows, key=lambda r: r[2])
+    print("name,us_per_call,derived")
+    print(f"ablation_width,{us:.0f},dbar1={dbar:.0f};best_c={best[0]};best_recall={best[2]:.3f}")
+    for c, w, r in rows:
+        print(f"#  c={c:4.1f} W={w:4d} recall={r:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Kernel micro-bench: Pallas (interpret on CPU / Mosaic on TPU) vs jnp ref.
+
+On CPU the absolute numbers measure the interpreter, NOT the TPU kernel —
+the structural quantity we report is the roofline-relevant arithmetic
+intensity per kernel (FLOPs or bytes per output element), which is
+hardware-independent, plus wall time of the jnp reference for regression
+tracking.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import walks as wl
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    q = jnp.asarray(rng.integers(0, 200, (64, 128)).astype(np.int32))
+    x = jnp.asarray(rng.integers(0, 200, (4096, 128)).astype(np.int32))
+    us_ref = _time(lambda a, b: ref.l1_distance(a, b).block_until_ready()
+                   if False else ref.l1_distance(a, b), q, x)
+    # arithmetic intensity: 2*m ops per output, 2*m*4B streamed naive
+    rows.append(("l1_distance_ref_64x4096x128", us_ref,
+                 f"ops_per_out={2*128};bytes_per_out~{8*128/64:.0f}"))
+
+    wt = wl.make_walks(jax.random.PRNGKey(0), 128, 128, 256)
+    pts = jnp.asarray((rng.integers(0, 129, (256, 128)) * 2).astype(np.int32))
+    us_g = _time(lambda w, p: wl.eval_prefix(w, p), wt, pts)
+    us_t = _time(lambda pr, p: ref.rw_hash(pr, p), wt.pairs, pts)
+    rows.append(("rw_hash_gather_256x128x128f", us_g, "paper_lookup_path"))
+    rows.append(("rw_hash_thermo_ref_256x128x128f", us_t,
+                 "mxu_path_flops_per_hash=%d" % (2 * 128 * 128)))
+
+    da = jnp.sort(jnp.asarray(rng.integers(0, 1000, (256, 64)).astype(np.int32)), -1)
+    db = jnp.sort(jnp.asarray(rng.integers(0, 1000, (256, 64)).astype(np.int32)), -1)
+    ia = jnp.zeros((256, 64), jnp.int32); ib = ia + 1
+    us_m = _time(lambda *a: ref.topk_merge(*a)[0], da, ia, db, ib)
+    rows.append(("topk_merge_ref_256x64", us_m,
+                 "ring_step_bytes=%d" % (256 * 64 * 8)))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

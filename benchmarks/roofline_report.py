@@ -1,0 +1,43 @@
+"""Regenerate the EXPERIMENTS.md roofline table from dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report dryrun_single_pod.json ...
+"""
+import json
+import sys
+
+
+def fmt(x):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) < 1e-3 or abs(x) >= 1e5:
+        return f"{x:.2e}"
+    return f"{x:.3g}"
+
+
+def main(paths):
+    rows = []
+    for p in paths:
+        if p.endswith(".jsonl"):
+            rows += [json.loads(l) for l in open(p)]
+        else:
+            rows += json.load(open(p))
+    print("| arch | shape | mesh | t_comp(s) | t_mem(s) | t_coll(s) | bottleneck | MODEL/HLO flops | peak GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt(r['t_compute_s'])} | "
+              f"{fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} | {r['bottleneck']} | "
+              f"{fmt(r.get('useful_flops_frac'))} | {fmt(r['peak_bytes_device'] / 1e9)} |")
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    if skipped:
+        print()
+        print("Skipped cells (documented in DESIGN.md §Arch-applicability):")
+        for r in skipped:
+            print(f"* {r['arch']} x {r['shape']}: {r['reason']}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["dryrun_single_pod.json", "dryrun_multi_pod.json", "ann_cells.jsonl"])

@@ -1,0 +1,39 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``
+prints ``name,us_per_call,derived`` CSV rows (detail lines prefixed '#').
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (ablation_width, fig2_tables_vs_recall, kernel_bench,
+               table1_success_prob, table2_template, table4_ann_quality)
+
+MODULES = [
+    ("table1_success_prob", table1_success_prob),
+    ("table2_template", table2_template),
+    ("table4_ann_quality", table4_ann_quality),
+    ("fig2_tables_vs_recall", fig2_tables_vs_recall),
+    ("kernel_bench", kernel_bench),
+    ("ablation_width", ablation_width),
+]
+
+
+def main() -> None:
+    failed = []
+    for name, mod in MODULES:
+        print(f"# ==== {name} ====", flush=True)
+        try:
+            mod.main()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Paper Table 4: query time / recall / overall ratio / index size for
+MP-RW-LSH vs CP-LSH vs RW-LSH vs SRS on synthetic stand-ins of the paper's
+datasets (network-isolated container; same (dim, U) and cluster structure,
+n scaled to CPU — DESIGN.md Sect. 2).
+
+Index size follows the paper's accounting: hash tables store one (key, id)
+pair per point per table (8 bytes) [+ the fixed per-table head-cell cost the
+paper *excludes*; we exclude it too], SRS stores M floats per point.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core.index import IndexConfig, build_index, query_index
+from repro.data import ann_synthetic as ds
+
+def _index_size_mb(cfg: IndexConfig, n: int) -> float:
+    return cfg.num_tables * n * 8 / 1e6
+
+
+def tune_widths(data, queries, k):
+    """Per-dataset tuning like the paper's: W_rw ~ c*sqrt(dbar1) (raw-hash
+    std at the near radius is sqrt(d1)); W_cp ~ c*dbar1 (Cauchy scale IS d1).
+    dbar1 = measured mean k-NN distance on a query sample."""
+    td, _ = bl.brute_force_l1(data, queries[:16], k)
+    dbar = float(np.asarray(td, np.float64).mean())
+    w_rw = max(8, int(3.0 * np.sqrt(dbar)) & ~1)
+    w_cp = max(8, int(4.0 * dbar))
+    return w_rw, w_cp, dbar
+
+
+def run(names=("glove", "deep10m"), n_queries=64, k=10, runs=1):
+    rows = []
+    for name in names:
+        spec = ds.PAPER_DATASETS[name]
+        data = jnp.asarray(ds.make_dataset(spec))
+        queries = jnp.asarray(ds.make_queries(spec, np.asarray(data), n_queries))
+        td, ti = bl.brute_force_l1(data, queries, k)
+        td, ti = np.asarray(td), np.asarray(ti)
+        w_rw, w_cp, dbar = tune_widths(data, queries, k)
+
+        def timed(fn):
+            fn()  # compile
+            t0 = time.perf_counter()
+            out = fn()
+            jax.tree.leaves(out)[0].block_until_ready()
+            return out, (time.perf_counter() - t0) * 1e3 / n_queries
+
+        variants = {}
+        base = IndexConfig(num_tables=8, num_hashes=12, width=w_rw,
+                           num_probes=200, candidate_cap=128,
+                           universe=spec.universe, k=k, rerank_chunk=1024)
+        st = build_index(base, jax.random.PRNGKey(0), data)
+        variants["mp-rw-lsh"] = (base, st)
+        sp = bl.single_probe_config(base)
+        sp = IndexConfig(**{**sp.__dict__, "num_tables": 48})
+        variants["rw-lsh"] = (sp, build_index(sp, jax.random.PRNGKey(0), data))
+        cp = IndexConfig(num_tables=48, num_hashes=8, width=w_cp, num_probes=0,
+                         candidate_cap=128, universe=spec.universe,
+                         family="cauchy", k=k, rerank_chunk=1024)
+        variants["cp-lsh"] = (cp, build_index(cp, jax.random.PRNGKey(0), data))
+
+        for algo, (cfg, state) in variants.items():
+            (d, i), ms = timed(lambda: query_index(cfg, state, queries))
+            rows.append({
+                "dataset": name, "algo": algo,
+                "recall": bl.recall(np.asarray(i), ti),
+                "ratio": bl.overall_ratio(np.asarray(d), td),
+                "ms_per_query": ms,
+                "index_mb": _index_size_mb(cfg, data.shape[0]),
+                "tables": cfg.num_tables,
+            })
+        # SRS
+        srs = bl.build_srs(jax.random.PRNGKey(1), data, 10)
+        (d, i), ms = timed(lambda: bl.query_srs(srs, queries, 1024, k))
+        rows.append({
+            "dataset": name, "algo": "srs",
+            "recall": bl.recall(np.asarray(i), ti),
+            "ratio": bl.overall_ratio(np.asarray(d), td),
+            "ms_per_query": ms,
+            "index_mb": data.shape[0] * 10 * 4 / 1e6,
+            "tables": 0,
+        })
+    return rows
+
+
+def main():
+    t0 = time.time()
+    rows = run()
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    mp = [r for r in rows if r["algo"] == "mp-rw-lsh"]
+    oth = [r for r in rows if r["algo"] in ("rw-lsh", "cp-lsh")]
+    ratio = (np.mean([r["index_mb"] for r in oth]) /
+             max(np.mean([r["index_mb"] for r in mp]), 1e-9))
+    print("name,us_per_call,derived")
+    print(f"table4_ann_quality,{us:.0f},index_size_reduction={ratio:.1f}x")
+    for r in rows:
+        print(f"#  {r['dataset']:8s} {r['algo']:10s} recall={r['recall']:.4f} "
+              f"ratio={r['ratio']:.4f} {r['ms_per_query']:.2f}ms/q "
+              f"index={r['index_mb']:.1f}MB L={r['tables']}")
+
+
+if __name__ == "__main__":
+    main()

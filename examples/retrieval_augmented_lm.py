@@ -1,0 +1,77 @@
+"""Retrieval-augmented LM serving: every assigned architecture can act as the
+embedding producer for an MP-RW-LSH memory (kNN-LM style).
+
+Pipeline: prompt -> model hidden state (mean-pooled) -> paper Sect. 3.2
+normalization (shift/scale/round-to-even) -> MP-RW-LSH query -> neighbor ids.
+
+  PYTHONPATH=src python examples/retrieval_augmented_lm.py --arch smollm-360m
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.baselines import brute_force_l1, recall
+from repro.core.index import IndexConfig, build_index, query_index
+from repro.data.normalize import fit_normalizer
+from repro.models import model as M
+from repro.models import transformer as tf
+
+
+def embed(params, cfg, tokens):
+    """Mean-pooled final hidden state as the retrieval embedding."""
+    x = params["embed"][tokens] * jnp.sqrt(cfg.d_model)
+    pos = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32)[None],
+                           tokens.shape)
+    if cfg.kind == "hybrid":
+        h, _, _ = tf.hybrid_stack(params, cfg, x, positions=pos)
+    elif cfg.kind == "encdec":
+        h = tf.encoder_stack(
+            params, cfg, jnp.repeat(x, 1, axis=1))  # encoder as embedder
+    else:
+        h, _, _ = tf.decoder_stack(params, cfg, x, positions=pos)
+    return h.mean(axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--memory-size", type=int, default=4096)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    # 1. Build a "memory" of passage embeddings.
+    mem_tokens = rng.integers(1, cfg.vocab, (args.memory_size, 16)).astype(np.int32)
+    embs = np.asarray(jax.jit(lambda t: embed(params, cfg, t))(jnp.asarray(mem_tokens)))
+    print("memory embeddings:", embs.shape)
+
+    # 2. Normalize to even ints (paper Sect. 3.2) and index with MP-RW-LSH.
+    norm = fit_normalizer(embs, target_universe=512)
+    mem = norm.apply(embs)
+    icfg = IndexConfig(num_tables=6, num_hashes=10, width=96, num_probes=100,
+                       candidate_cap=64, universe=512, k=5)
+    state = build_index(icfg, jax.random.PRNGKey(1), jnp.asarray(mem))
+
+    # 3. Queries = perturbed copies of some passages (near-duplicates).
+    q_idx = rng.integers(0, args.memory_size, 32)
+    q_tokens = mem_tokens[q_idx].copy()
+    q_tokens[:, -2:] = rng.integers(1, cfg.vocab, (32, 2))  # small edit
+    q_embs = np.asarray(jax.jit(lambda t: embed(params, cfg, t))(jnp.asarray(q_tokens)))
+    q = norm.apply(q_embs)
+
+    d, i = query_index(icfg, state, jnp.asarray(q))
+    top1 = np.asarray(i[:, 0])
+    hit = float((top1 == q_idx).mean())
+    td, ti = brute_force_l1(jnp.asarray(mem), jnp.asarray(q), 5)
+    r = recall(np.asarray(i), np.asarray(ti))
+    print(f"arch={cfg.name}: top-1 source-passage hit-rate={hit:.3f} "
+          f"recall@5 vs exact-L1={r:.3f}")
+
+
+if __name__ == "__main__":
+    main()

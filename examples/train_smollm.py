@@ -1,0 +1,15 @@
+"""Train a reduced smollm for a few hundred steps with checkpoint/restart
+(deliverable b, training flavor).  Thin wrapper over the launcher.
+
+  PYTHONPATH=src python examples/train_smollm.py
+"""
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    train_main([
+        "--arch", "smollm-360m", "--reduced",
+        "--steps", "200", "--batch", "8", "--seq", "128",
+        "--lr", "3e-3", "--ckpt-dir", "/tmp/repro_train_ckpt",
+        "--ckpt-every", "50", "--resume",
+    ])

@@ -1,0 +1,2 @@
+"""repro: MP-RW-LSH (ANNS-L1) as a multi-pod JAX framework."""
+__version__ = "0.1.0"

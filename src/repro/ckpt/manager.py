@@ -1,0 +1,174 @@
+"""Sharded, atomic, elastic checkpointing (no orbax dependency).
+
+Design for 1000+-node clusters (DESIGN.md Sect. 4):
+
+  * every leaf is saved as one .npy per *global* array plus a JSON manifest
+    (tree structure, shapes, dtypes, step).  Large leaves are chunked along
+    dim 0 into multiple .npy files so hosts write only their local shards;
+    on this single-process container the manager writes all chunks itself,
+    but the layout (chunk files + manifest) is the multi-host layout.
+  * atomicity: writes go to ``step_K.tmp/`` then ``os.rename`` to ``step_K``
+    (rename is atomic on POSIX); a crash mid-write never corrupts the latest
+    complete checkpoint.
+  * elasticity: the manifest stores *global* shapes only — restore re-shards
+    onto whatever mesh the new job has (shard counts may differ from the
+    writer's), which is what lets a job resume after losing a pod.
+  * async: ``save(..., blocking=False)`` hands the host-side write to a
+    daemon thread after device->host transfer, overlapping I/O with step
+    compute.
+  * retention: keep the newest ``keep`` checkpoints, delete older ones.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]
+
+_SEP = "/"
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _np_dtype(name: str):
+    """Resolve a dtype string incl. ml_dtypes (bfloat16, fp8 variants)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def save_pytree(tree: Any, directory: str, chunk_bytes: int = 1 << 30) -> None:
+    """Write tree -> directory (must not exist; caller handles atomicity)."""
+    os.makedirs(directory)
+    flat, treedef = _flatten(tree)
+    manifest = {"leaves": {}, "treedef": None}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        true_dtype = arr.dtype.name
+        if true_dtype not in np.sctypeDict:
+            # ml_dtypes (bfloat16 etc.): store raw bytes as uint, record the
+            # true dtype in the manifest and re-view on restore.
+            arr = arr.view(f"u{arr.dtype.itemsize}")
+        fname = key.replace(_SEP, ".")
+        nchunks = 1
+        if arr.nbytes > chunk_bytes and arr.ndim > 0 and arr.shape[0] > 1:
+            nchunks = min(arr.shape[0], max(1, arr.nbytes // chunk_bytes))
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape),
+            "dtype": true_dtype, "chunks": nchunks,
+        }
+        if nchunks == 1:
+            np.save(os.path.join(directory, fname + ".npy"), arr)
+        else:
+            for ci, part in enumerate(np.array_split(arr, nchunks, axis=0)):
+                np.save(os.path.join(directory, f"{fname}.c{ci}.npy"), part)
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def restore_pytree(template: Any, directory: str, shardings: Any = None) -> Any:
+    """Restore into the structure of ``template`` (shapes/dtypes verified).
+
+    ``shardings``: optional matching tree of jax.sharding.Sharding — arrays
+    are placed directly onto the (possibly different) target mesh (elastic
+    restore)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t, treedef = _flatten(template)
+    flat_s = _flatten(shardings)[0] if shardings is not None else {}
+    vals = []
+    for key, leaf in flat_t.items():
+        meta = manifest["leaves"][key]
+        if meta["chunks"] == 1:
+            arr = np.load(os.path.join(directory, meta["file"] + ".npy"))
+        else:
+            arr = np.concatenate([
+                np.load(os.path.join(directory, f"{meta['file']}.c{ci}.npy"))
+                for ci in range(meta["chunks"])], axis=0)
+        want = _np_dtype(meta["dtype"])
+        if arr.dtype != want:
+            arr = arr.view(want)  # ml_dtypes stored as raw uints
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: ckpt shape {arr.shape} != {leaf.shape}")
+        sh = flat_s.get(key)
+        vals.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), vals)
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        self.wait()
+        # device->host now (cheap, must happen before step mutates buffers)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def write():
+            final = self._step_dir(step)
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            save_pytree(host_tree, tmp)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def restore(self, step: int, template: Any, shardings: Any = None) -> Any:
+        return restore_pytree(template, self._step_dir(step), shardings)
+
+    def restore_latest(self, template: Any, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, template, shardings)
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

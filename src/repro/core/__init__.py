@@ -1,0 +1,1 @@
+from . import baselines, hashes, index, multiprobe, probability, walks  # noqa: F401

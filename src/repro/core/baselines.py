@@ -1,0 +1,116 @@
+"""Baselines the paper compares against (Sect. 5):
+
+  * brute-force exact L1 k-NN (ground truth for recall / overall ratio)
+  * RW-LSH single-probe (the paper's own baseline: MP-RW-LSH with T=0)
+  * CP-LSH (Cauchy projection, single-probe — state of the art for ANNS-L1)
+  * MP-CP-LSH (the multi-probe extension the paper shows is "top-light")
+  * SRS (Cauchy projection to M dims + exact t-NN in projection space +
+    exact L1 rerank).  The paper's SRS uses a cover tree; pointer machines
+    don't map to TPUs, so we use a brute-force projected t-NN (an accuracy
+    *upper bound* for SRS at equal t) — see DESIGN.md Sect. 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashes as hashes_lib
+from .index import IndexConfig, build_index, query_index, l1_distance_chunked
+
+__all__ = [
+    "brute_force_l1",
+    "single_probe_config",
+    "cp_lsh_config",
+    "mp_cp_lsh_config",
+    "SrsState",
+    "build_srs",
+    "query_srs",
+    "recall",
+    "overall_ratio",
+]
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def brute_force_l1(dataset: jax.Array, queries: jax.Array, k: int, chunk: int = 2048):
+    """Exact k-NN in L1.  Chunked over dataset rows; O(n*m) per query."""
+    n = dataset.shape[0]
+    q = queries.shape[0]
+    ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (q, n))
+    return l1_distance_chunked(dataset, queries, ids, k, chunk)
+
+
+def single_probe_config(cfg: IndexConfig) -> IndexConfig:
+    """RW-LSH baseline = the same index probed only at the epicenter."""
+    return dataclasses.replace(cfg, num_probes=0)
+
+
+def cp_lsh_config(cfg: IndexConfig, width: int) -> IndexConfig:
+    return dataclasses.replace(cfg, family="cauchy", width=width, num_probes=0,
+                               hash_impl="gather")
+
+
+def mp_cp_lsh_config(cfg: IndexConfig, width: int) -> IndexConfig:
+    return dataclasses.replace(cfg, family="cauchy", width=width,
+                               hash_impl="gather")
+
+
+# --------------------------------------------------------------------------
+# SRS
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SrsState:
+    proj: jax.Array       # (M, m) Cauchy projection
+    projected: jax.Array  # (n, M) f(D)
+    dataset: jax.Array    # (n, m)
+
+    def tree_flatten(self):
+        return (self.proj, self.projected, self.dataset), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def build_srs(key: jax.Array, dataset: jax.Array, num_proj: int = 10) -> SrsState:
+    proj = jax.random.cauchy(key, (num_proj, dataset.shape[1]), jnp.float32)
+    projected = dataset.astype(jnp.float32) @ proj.T
+    return SrsState(proj=proj, projected=projected, dataset=dataset)
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def query_srs(state: SrsState, queries: jax.Array, t: int, k: int):
+    """t-NN in projection space (L2), exact L1 rerank of those t."""
+    fq = queries.astype(jnp.float32) @ state.proj.T                 # (Q, M)
+    d2 = jnp.sum((state.projected[None, :, :] - fq[:, None, :]) ** 2, axis=-1)
+    _, cand = jax.lax.top_k(-d2, t)                                 # (Q, t)
+    return l1_distance_chunked(state.dataset, queries, cand.astype(jnp.int32),
+                               k, chunk=min(t, 512))
+
+
+# --------------------------------------------------------------------------
+# Quality metrics (paper Sect. 5.1)
+# --------------------------------------------------------------------------
+
+def recall(result_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """|R ∩ R*| / |R| averaged over queries."""
+    r = 0.0
+    for a, b in zip(result_ids, true_ids):
+        r += len(set(a[a >= 0].tolist()) & set(b.tolist())) / len(b)
+    return r / len(result_ids)
+
+
+def overall_ratio(result_d: np.ndarray, true_d: np.ndarray) -> float:
+    """(1/k) sum_i ||q - o_i|| / ||q - o_i*||, averaged over queries.
+    Missing results (dist sentinel) are excluded defensively."""
+    rd = np.asarray(result_d, np.float64)
+    td = np.asarray(true_d, np.float64)
+    ok = rd < np.iinfo(np.int32).max // 4
+    ratio = np.where(ok, rd / np.maximum(td, 1e-9), np.nan)
+    return float(np.nanmean(ratio))

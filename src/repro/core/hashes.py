@@ -1,0 +1,161 @@
+"""LSH families: RW-LSH (the paper's), CP-LSH and GP-LSH (baselines).
+
+All three share the bucket quantization h(s) = floor((f(s) + b) / W)
+(paper Sect. 2.1); they differ only in the raw hash f:
+
+  * RW-LSH : f(s) = sum_i tau_i(s_i), tau_i precomputed random walks.
+  * CP-LSH : f(s) = <s, eta>, eta i.i.d. standard Cauchy.
+  * GP-LSH : f(s) = <s, eta>, eta i.i.d. standard Gaussian.
+
+Also: the uint32 universal key mixing that replaces CPU pointer hash tables
+with sorted-key arrays (DESIGN.md Sect. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import walks as walks_lib
+
+__all__ = [
+    "LshParams",
+    "make_rw_params",
+    "make_cp_params",
+    "make_gp_params",
+    "raw_hash",
+    "bucket_and_offsets",
+    "mix_keys",
+]
+
+_KEY_MUL = jnp.uint32(2654435761)  # Knuth multiplicative constant
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LshParams:
+    """Parameters for L tables x M hash functions.
+
+    family  : 'rw' | 'cauchy' | 'gaussian'   (static)
+    width   : bucket width W                 (static)
+    offsets : (L, M) float32, b ~ U[0, W)
+    mix_a   : (L, M) uint32 odd multipliers for key mixing
+    mix_c   : (L,)   uint32 additive constants
+    walks   : WalkTable for 'rw' (num_fns = L*M), else None
+    proj    : (L, M, m) float32 projection vectors for 'cauchy'/'gaussian'
+    """
+
+    family: str
+    width: float
+    offsets: jax.Array
+    mix_a: jax.Array
+    mix_c: jax.Array
+    walks: Optional[walks_lib.WalkTable] = None
+    proj: Optional[jax.Array] = None
+
+    @property
+    def num_tables(self) -> int:
+        return self.offsets.shape[0]
+
+    @property
+    def num_hashes(self) -> int:
+        return self.offsets.shape[1]
+
+    def tree_flatten(self):
+        children = (self.offsets, self.mix_a, self.mix_c, self.walks, self.proj)
+        return children, (self.family, self.width)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        family, width = aux
+        offsets, mix_a, mix_c, walks, proj = children
+        return cls(family, width, offsets, mix_a, mix_c, walks, proj)
+
+
+def _common(key, num_tables, num_hashes, width):
+    k_off, k_a, k_c = jax.random.split(key, 3)
+    offsets = jax.random.uniform(k_off, (num_tables, num_hashes), jnp.float32, 0.0, width)
+    mix_a = jax.random.randint(k_a, (num_tables, num_hashes), 0, jnp.iinfo(jnp.int32).max).astype(jnp.uint32)
+    mix_a = mix_a * jnp.uint32(2) + jnp.uint32(1)  # odd
+    mix_c = jax.random.randint(k_c, (num_tables,), 0, jnp.iinfo(jnp.int32).max).astype(jnp.uint32)
+    return offsets, mix_a, mix_c
+
+
+def make_rw_params(
+    key: jax.Array, num_tables: int, num_hashes: int, dim: int, universe: int, width: int
+) -> LshParams:
+    k_w, k_rest = jax.random.split(key)
+    walks = walks_lib.make_walks(k_w, num_tables * num_hashes, dim, universe)
+    offsets, mix_a, mix_c = _common(k_rest, num_tables, num_hashes, width)
+    return LshParams("rw", float(width), offsets, mix_a, mix_c, walks=walks)
+
+
+def _make_proj_params(key, family, num_tables, num_hashes, dim, width):
+    k_p, k_rest = jax.random.split(key)
+    if family == "cauchy":
+        # Cauchy = ratio of independent standard normals (heavy-tailed).
+        proj = jax.random.cauchy(k_p, (num_tables, num_hashes, dim), jnp.float32)
+    else:
+        proj = jax.random.normal(k_p, (num_tables, num_hashes, dim), jnp.float32)
+    offsets, mix_a, mix_c = _common(k_rest, num_tables, num_hashes, width)
+    return LshParams(family, float(width), offsets, mix_a, mix_c, proj=proj)
+
+
+def make_cp_params(key, num_tables, num_hashes, dim, width) -> LshParams:
+    return _make_proj_params(key, "cauchy", num_tables, num_hashes, dim, width)
+
+
+def make_gp_params(key, num_tables, num_hashes, dim, width) -> LshParams:
+    return _make_proj_params(key, "gaussian", num_tables, num_hashes, dim, width)
+
+
+def raw_hash(params: LshParams, points: jax.Array, impl: str = "gather") -> jax.Array:
+    """Raw hash values f(s) for a batch of points.
+
+    points : (n, m); int32 even for 'rw', float32 for projections.
+    returns: (n, L, M) float32.
+    """
+    n = points.shape[0]
+    l, m = params.num_tables, params.num_hashes
+    if params.family == "rw":
+        if impl == "gather":
+            f = walks_lib.eval_prefix(params.walks, points)      # (n, L*M)
+        elif impl == "thermo":
+            f = walks_lib.eval_pairs_thermo(params.walks, points)
+        elif impl == "pallas":
+            from repro.kernels import ops as kops
+            f = kops.rw_hash(params.walks.pairs, points)
+        else:
+            raise ValueError(f"unknown rw impl {impl!r}")
+        return f.reshape(n, l, m).astype(jnp.float32)
+    # projection families
+    x = points.astype(jnp.float32)
+    return jnp.einsum("nd,lmd->nlm", x, params.proj)
+
+
+def bucket_and_offsets(params: LshParams, f: jax.Array):
+    """Quantize raw hashes.
+
+    f : (..., L, M) raw hash values.
+    Returns (bucket, x_neg):
+      bucket : (..., L, M) int32  h = floor((f + b)/W)
+      x_neg  : (..., L, M) float32 epicenter offsets a = frac((f+b)/W)*W
+    """
+    shifted = (f + params.offsets) / params.width
+    bucket = jnp.floor(shifted)
+    x_neg = (shifted - bucket) * params.width
+    return bucket.astype(jnp.int32), x_neg
+
+
+def mix_keys(params: LshParams, bucket: jax.Array) -> jax.Array:
+    """Mix an (..., L, M) bucket vector into (..., L) uint32 keys.
+
+    key_l = c_l + sum_j a_{l,j} * h_j  (mod 2^32) — a universal-style mix;
+    spurious key collisions only add rerank candidates (DESIGN.md Sect. 2).
+    """
+    h = bucket.astype(jnp.uint32)
+    terms = h * params.mix_a                        # (..., L, M) wraparound
+    key = terms.sum(axis=-1).astype(jnp.uint32) + params.mix_c
+    return (key * _KEY_MUL) ^ (key >> jnp.uint32(15))

@@ -1,0 +1,243 @@
+"""MP-RW-LSH index: TPU-native build + batched multi-probe query.
+
+The CPU design (chaining hash tables + per-query heap) is replaced by the
+TPU-idiomatic design described in DESIGN.md Sect. 2:
+
+  build : raw-hash all points -> bucket vectors -> uint32 mixed keys ->
+          one sort per table.  Collective-free; embarrassingly shardable by
+          dataset rows.
+  query : raw-hash queries -> epicenter offsets -> template instantiation
+          (sort + take_along_axis; paper refinement 3) -> probe keys ->
+          searchsorted -> bounded candidate gather -> dedup -> exact L1
+          rerank (chunked scan, optional Pallas kernel) -> top-k.
+
+Everything is statically shaped and jit/vmap/shard_map friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashes as hashes_lib
+from . import multiprobe as mp_lib
+
+__all__ = ["IndexConfig", "IndexState", "build_index", "query_index", "l1_distance_chunked"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Static configuration (hashable; safe to close over in jit)."""
+
+    num_tables: int = 8          # L
+    num_hashes: int = 10         # M
+    width: int = 8               # W (even for 'rw')
+    num_probes: int = 100        # T extra buckets per table
+    candidate_cap: int = 8       # max candidates gathered per probe
+    universe: int = 256          # U, max (even) coordinate for 'rw'
+    family: str = "rw"           # 'rw' | 'cauchy' | 'gaussian'
+    hash_impl: str = "gather"    # 'gather' | 'thermo' | 'pallas'
+    rerank_chunk: int = 512      # candidates per rerank scan step
+    k: int = 50                  # neighbors returned
+    dataset_dtype: str = "int32" # 'int16' halves rerank-gather bytes when
+                                 # universe < 32768 (EXPERIMENTS.md §Perf C1)
+
+    @property
+    def probes_per_table(self) -> int:
+        return self.num_probes + 1  # + epicenter
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class IndexState:
+    """Device-resident index for one dataset shard.
+
+    params      : LshParams (walks/projections, offsets, key mixers)
+    sorted_keys : (L, n) uint32   mixed bucket keys, ascending per table
+    sorted_ids  : (L, n) int32    local row ids aligned with sorted_keys
+    dataset     : (n, m) int32    the shard's points (rerank source)
+    template    : (T+1, 2M) int8  universal probing template (row 0 = epicenter)
+    row_offset  : ()  int32       global id of local row 0 (sharding)
+    """
+
+    params: hashes_lib.LshParams
+    sorted_keys: jax.Array
+    sorted_ids: jax.Array
+    dataset: jax.Array
+    template: jax.Array
+    row_offset: jax.Array
+
+    def tree_flatten(self):
+        return (
+            self.params, self.sorted_keys, self.sorted_ids,
+            self.dataset, self.template, self.row_offset,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def make_template(cfg: IndexConfig) -> np.ndarray:
+    """(T+1, 2M) template matrix with the epicenter (all-zero) row first."""
+    sets = mp_lib.build_template(cfg.num_hashes, float(cfg.width), cfg.num_probes)
+    mat = mp_lib.template_matrix(sets, cfg.num_hashes)
+    return np.concatenate([np.zeros((1, 2 * cfg.num_hashes), np.int8), mat])
+
+
+def make_params(cfg: IndexConfig, key: jax.Array, dim: int) -> hashes_lib.LshParams:
+    if cfg.family == "rw":
+        return hashes_lib.make_rw_params(
+            key, cfg.num_tables, cfg.num_hashes, dim, cfg.universe, cfg.width)
+    if cfg.family == "cauchy":
+        return hashes_lib.make_cp_params(key, cfg.num_tables, cfg.num_hashes, dim, cfg.width)
+    if cfg.family == "gaussian":
+        return hashes_lib.make_gp_params(key, cfg.num_tables, cfg.num_hashes, dim, cfg.width)
+    raise ValueError(cfg.family)
+
+
+def build_index(
+    cfg: IndexConfig,
+    key: jax.Array,
+    dataset: jax.Array,
+    row_offset: jax.Array | int = 0,
+    params: Optional[hashes_lib.LshParams] = None,
+) -> IndexState:
+    """Build the index over one dataset shard.  Collective-free.
+
+    ``params`` may be passed in so that all shards share identical hash
+    functions (required for distributed correctness); if None they are
+    generated from ``key`` (fine for single-shard use since the same key
+    yields the same params on every shard).
+    """
+    n, dim = dataset.shape
+    if params is None:
+        params = make_params(cfg, key, dim)
+    f = hashes_lib.raw_hash(params, dataset, impl=cfg.hash_impl)     # (n, L, M)
+    if cfg.dataset_dtype != str(dataset.dtype):
+        dataset = dataset.astype(jnp.dtype(cfg.dataset_dtype))
+    bucket, _ = hashes_lib.bucket_and_offsets(params, f)
+    keys = hashes_lib.mix_keys(params, bucket)                       # (n, L)
+    keys_t = keys.T                                                  # (L, n)
+    order = jnp.argsort(keys_t, axis=-1)
+    sorted_keys = jnp.take_along_axis(keys_t, order, axis=-1)
+    sorted_ids = order.astype(jnp.int32)
+    template = jnp.asarray(make_template(cfg))
+    return IndexState(
+        params=params,
+        sorted_keys=sorted_keys,
+        sorted_ids=sorted_ids,
+        dataset=dataset,
+        template=template,
+        row_offset=jnp.asarray(row_offset, jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+# Query path
+# --------------------------------------------------------------------------
+
+def _probe_candidate_ids(cfg: IndexConfig, state: IndexState, queries: jax.Array):
+    """Multi-probe -> candidate local row ids.
+
+    returns ids (Q, L*P*C) int32 (sentinel n for invalid) — deduplicated.
+    """
+    q = queries.shape[0]
+    l, m = cfg.num_tables, cfg.num_hashes
+    p, c = cfg.probes_per_table, cfg.candidate_cap
+    n = state.dataset.shape[0]
+
+    f = hashes_lib.raw_hash(state.params, queries, impl=cfg.hash_impl)  # (Q,L,M)
+    bucket, x_neg = hashes_lib.bucket_and_offsets(state.params, f)
+    # (Q, L, P, M) perturbations — paper refinement 3, batched.
+    deltas = mp_lib.instantiate_template(state.template, x_neg, float(cfg.width))
+    probe_buckets = bucket[:, :, None, :] + deltas.astype(jnp.int32)
+    # mix_keys expects (..., L, M): move the probe axis ahead of L.
+    probe_keys = hashes_lib.mix_keys(
+        state.params, probe_buckets.transpose(0, 2, 1, 3))              # (Q,P,L)
+    probe_keys = probe_keys.transpose(0, 2, 1)                          # (Q,L,P)
+
+    # searchsorted per table.
+    def per_table(sk, pk):  # sk (n,), pk (Q,P)
+        lo = jnp.searchsorted(sk, pk, side="left")
+        hi = jnp.searchsorted(sk, pk, side="right")
+        return lo, hi
+
+    lo, hi = jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
+        state.sorted_keys, probe_keys)                                  # (Q,L,P)
+    slots = lo[..., None] + jnp.arange(c, dtype=lo.dtype)               # (Q,L,P,C)
+    valid = slots < jnp.minimum(hi, lo + c)[..., None]
+    slots = jnp.clip(slots, 0, n - 1)
+
+    def gather_ids(sid, sl):  # sid (n,), sl (Q,P,C)
+        return sid[sl]
+
+    ids = jax.vmap(gather_ids, in_axes=(0, 1), out_axes=1)(
+        state.sorted_ids, slots)                                        # (Q,L,P,C)
+    ids = jnp.where(valid, ids, n).reshape(q, l * p * c)
+
+    # Dedup: sort ascending; equal-adjacent -> sentinel.
+    ids = jnp.sort(ids, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros((q, 1), bool), ids[:, 1:] == ids[:, :-1]], axis=-1)
+    return jnp.where(dup, n, ids)
+
+
+def l1_distance_chunked(
+    dataset: jax.Array, queries: jax.Array, ids: jax.Array, k: int,
+    chunk: int, use_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact L1 rerank of gathered candidates with a running top-k.
+
+    dataset (n, m) int; queries (Q, m) int; ids (Q, Ctot) int32 with sentinel
+    n marking invalid.  Returns (dists (Q,k) int32, ids (Q,k) int32); invalid
+    entries have dist = INT32_MAX/2 and id = -1.
+    """
+    n = dataset.shape[0]
+    q, ctot = ids.shape
+    big = jnp.int32(np.iinfo(np.int32).max // 2)
+    pad = (-ctot) % chunk
+    if pad:
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=n)
+    steps = ids.shape[1] // chunk
+    ids_steps = ids.reshape(q, steps, chunk).transpose(1, 0, 2)     # (S,Q,c)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+    def body(carry, step_ids):
+        best_d, best_i = carry                                      # (Q,k)
+        sl = jnp.clip(step_ids, 0, n - 1)                           # (Q,c)
+        rows = dataset[sl]                                          # (Q,c,m)
+        if use_kernel:
+            d = kops.l1_distance_rows(queries, rows)                # (Q,c)
+        else:
+            # HBM gather stays at dataset dtype (int16 under §Perf C1);
+            # the |diff| accumulation is widened to int32 in registers.
+            diff = rows.astype(jnp.int32) - queries[:, None, :].astype(jnp.int32)
+            d = jnp.abs(diff).sum(axis=-1).astype(jnp.int32)
+        d = jnp.where(step_ids >= n, big, d)
+        cd = jnp.concatenate([best_d, d], axis=-1)
+        ci = jnp.concatenate([best_i, step_ids], axis=-1)
+        nd, sel = jax.lax.top_k(-cd, k)
+        return (-nd, jnp.take_along_axis(ci, sel, axis=-1)), None
+
+    init = (jnp.full((q, k), big, jnp.int32), jnp.full((q, k), n, jnp.int32))
+    (best_d, best_i), _ = jax.lax.scan(body, init, ids_steps)
+    best_i = jnp.where(best_d >= big, -1, best_i)
+    return best_d, best_i
+
+
+@partial(jax.jit, static_argnums=0)
+def query_index(cfg: IndexConfig, state: IndexState, queries: jax.Array):
+    """Batched ANN query.  Returns (dists (Q,k) int32, global_ids (Q,k) int32)."""
+    ids = _probe_candidate_ids(cfg, state, queries)
+    d, i = l1_distance_chunked(
+        state.dataset, queries, ids, cfg.k, cfg.rerank_chunk,
+        use_kernel=(cfg.hash_impl == "pallas"))
+    gid = jnp.where(i >= 0, i + state.row_offset, -1)
+    return d, gid

@@ -1,0 +1,239 @@
+"""Multi-probe machinery (paper Sect. 2.2, 3.3, 4).
+
+Host-side (NumPy) components — build-time / analysis-time:
+  * ``heap_sequence``        — refinements 1+2: heap over subset-sum keys,
+                               emits near-optimal perturbation index sets.
+  * ``build_template``       — refinement 3: the universal template, i.e. the
+                               heap sequence computed on E[z_j^2] constants.
+  * ``exact_topk_success``   — exact enumeration of all 3^M buckets (small M),
+                               the oracle for the *optimal* probing sequence
+                               used by paper Table 1.
+  * ``sequence_success``     — P_T(d) of a given probing sequence (Table 2).
+
+Device-side (JAX) component:
+  * ``instantiate_template`` — per-query, fully batched instantiation of the
+                               template into perturbation vectors (sort +
+                               take_along_axis; no heap at query time).
+
+Conventions.  For one hash table with M hash functions, the epicenter offsets
+are a_i = frac((f_i(q)+b_i)/W) * W = x_i(-1), and x_i(+1) = W - a_i
+(paper Sect. 2.2).  The 2M boundary distances are stored concatenated:
+x_all = [x_1(-1)..x_M(-1), x_1(+1)..x_M(+1)]; index i < M means (dim i, -1),
+index i >= M means (dim i-M, +1).  A perturbation *index set* A is a subset of
+sorted ranks {1..2M} (1-based as in the paper); rank j and rank 2M+1-j always
+belong to the same dimension (involution x -> W - x), so a valid set contains
+at most one of each such pair.
+"""
+from __future__ import annotations
+
+import heapq
+from functools import reduce
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .probability import expected_zj_sq, interval_prob
+
+__all__ = [
+    "heap_sequence",
+    "build_template",
+    "template_matrix",
+    "instantiate_template",
+    "perturbations_from_sets",
+    "coord_landing_probs",
+    "exact_topk_success",
+    "sequence_success",
+    "success_table_mc",
+]
+
+
+# --------------------------------------------------------------------------
+# Refinements 1+2: heap over subset sums.
+# --------------------------------------------------------------------------
+
+def heap_sequence(z_sq: np.ndarray, num_probes: int) -> List[Tuple[int, ...]]:
+    """Emit the first ``num_probes`` *valid* perturbation index sets in
+    increasing order of sum_{j in A} z_sq[j-1].
+
+    z_sq must be sorted ascending (z_1^2 <= ... <= z_{2M}^2).  Uses the
+    shift/expand successor generation of Lv et al. so only O(T) sets are
+    ever scored.  Sets are 1-based rank tuples.
+    """
+    two_m = len(z_sq)
+    m = two_m // 2
+
+    def score(a: Tuple[int, ...]) -> float:
+        return float(sum(z_sq[j - 1] for j in a))
+
+    def valid(a: Tuple[int, ...]) -> bool:
+        s = set(a)
+        return all((two_m + 1 - j) not in s for j in a) and all(1 <= j <= two_m for j in a)
+
+    out: List[Tuple[int, ...]] = []
+    heap: List[Tuple[float, Tuple[int, ...]]] = [(score((1,)), (1,))]
+    seen = set()
+    while heap and len(out) < num_probes:
+        key, a = heapq.heappop(heap)
+        if a in seen:
+            continue
+        seen.add(a)
+        if valid(a):
+            out.append(a)
+        j = a[-1]
+        if j + 1 <= two_m:
+            shift = a[:-1] + (j + 1,)
+            expand = a + (j + 1,)
+            heapq.heappush(heap, (score(shift), shift))
+            heapq.heappush(heap, (score(expand), expand))
+    return out
+
+
+def build_template(num_hashes: int, width: float, num_probes: int) -> List[Tuple[int, ...]]:
+    """Refinement 3: the universal probing template (paper Sect. 2.2).
+
+    Returns ``num_probes`` rank sets ordered by expected subset-sum of
+    E[z_j^2].  Query-independent; computed once per (M, W)."""
+    z_sq = expected_zj_sq(num_hashes, width)
+    return heap_sequence(z_sq, num_probes)
+
+
+def template_matrix(sets: Sequence[Tuple[int, ...]], num_hashes: int) -> np.ndarray:
+    """(T, 2M) 0/1 matrix over sorted-z ranks (columns are rank-1 index)."""
+    t = np.zeros((len(sets), 2 * num_hashes), np.int8)
+    for r, a in enumerate(sets):
+        for j in a:
+            t[r, j - 1] = 1
+    return t
+
+
+def perturbations_from_sets(
+    sets: Sequence[Tuple[int, ...]], x_all: np.ndarray
+) -> np.ndarray:
+    """Host-side instantiation: rank sets -> perturbation vectors.
+
+    x_all : (2M,) boundary distances in the concat layout described above.
+    returns (T, M) int8 delta vectors.
+    """
+    two_m = x_all.shape[0]
+    m = two_m // 2
+    perm = np.argsort(x_all, kind="stable")  # rank r (0-based) -> orig index
+    out = np.zeros((len(sets), m), np.int8)
+    for r, a in enumerate(sets):
+        for j in a:
+            orig = perm[j - 1]
+            if orig < m:
+                out[r, orig] = -1
+            else:
+                out[r, orig - m] = 1
+    return out
+
+
+# --------------------------------------------------------------------------
+# Device-side template instantiation (batched, pure JAX).
+# --------------------------------------------------------------------------
+
+def instantiate_template(template: jax.Array, x_neg: jax.Array, width: float) -> jax.Array:
+    """Batched refinement-3 instantiation.
+
+    template : (T, 2M) int8 0/1 matrix over sorted ranks (static).
+    x_neg    : (..., M) epicenter offsets a_i = x_i(-1); x_i(+1) = W - a_i.
+    returns  : (..., T, M) int8 perturbation vectors.
+    """
+    m = x_neg.shape[-1]
+    x_all = jnp.concatenate([x_neg, width - x_neg], axis=-1)    # (..., 2M)
+    perm = jnp.argsort(x_all, axis=-1)                          # rank -> orig
+    invperm = jnp.argsort(perm, axis=-1)                        # orig -> rank
+    # mapped[..., t, i_orig] = template[t, rank(i_orig)]
+    tmpl = template[(None,) * (x_neg.ndim - 1)]                 # (...,1s, T, 2M)
+    mapped = jnp.take_along_axis(
+        jnp.broadcast_to(tmpl, x_neg.shape[:-1] + template.shape),
+        invperm[..., None, :].astype(jnp.int32),
+        axis=-1,
+    )                                                           # (..., T, 2M)
+    delta = (-mapped[..., :m] + mapped[..., m:]).astype(jnp.int8)
+    return delta
+
+
+# --------------------------------------------------------------------------
+# Success probabilities (paper Sect. 4, Tables 1 & 2).
+# --------------------------------------------------------------------------
+
+def coord_landing_probs(a: np.ndarray, width: float, family: str, d: float) -> np.ndarray:
+    """Per-coordinate landing probabilities.
+
+    a : (M,) epicenter offsets.  Returns (M, 3) probabilities for
+    delta in (-1, 0, +1):  Pr[f(s)-f(q) in [delta*W - a, delta*W - a + W)].
+    """
+    a = np.asarray(a, np.float64)
+    deltas = np.array([-1.0, 0.0, 1.0])
+    lo = deltas[None, :] * width - a[:, None]
+    hi = lo + width
+    return interval_prob(family, d, lo, hi)
+
+
+def exact_topk_success(
+    a: np.ndarray, width: float, family: str, d: float, t_probes: Sequence[int]
+) -> np.ndarray:
+    """P_T(d) under the *optimal* probing sequence, via exact enumeration of
+    all 3^M buckets in the neighborhood (paper Table 1 protocol).
+
+    Returns array of total success probabilities, one per T in t_probes
+    (each counts the epicenter + T additional buckets)."""
+    m = len(a)
+    if m > 14:
+        raise ValueError("exact enumeration is 3^M; use heap_sequence for M>14")
+    probs3 = coord_landing_probs(a, width, family, d)           # (M, 3)
+    full = reduce(np.multiply.outer, probs3)                    # (3,)*M tensor
+    flat = np.sort(full.ravel())[::-1]
+    csum = np.cumsum(flat)
+    return np.array([csum[min(t, len(flat) - 1)] for t in t_probes])
+
+
+def sequence_success(
+    deltas: np.ndarray, a: np.ndarray, width: float, family: str, d: float,
+    t_probes: Sequence[int],
+) -> np.ndarray:
+    """P_T(d) of an explicit probing sequence (epicenter is prepended).
+
+    deltas : (T, M) perturbation vectors (int in {-1,0,1}).
+    """
+    probs3 = coord_landing_probs(a, width, family, d)           # (M, 3)
+    seq = np.concatenate([np.zeros((1, deltas.shape[1]), np.int8), deltas])
+    per = probs3[np.arange(seq.shape[1])[None, :], seq + 1]     # (T+1, M)
+    bucket_p = per.prod(axis=1)
+    csum = np.cumsum(bucket_p)
+    return np.array([csum[min(t, len(csum) - 1)] for t in t_probes])
+
+
+def success_table_mc(
+    family: str,
+    num_hashes: int,
+    width: float,
+    d_values: Sequence[float],
+    t_values: Sequence[int],
+    runs: int = 1000,
+    seed: int = 0,
+    use_template: bool = False,
+) -> np.ndarray:
+    """Monte-Carlo reproduction of paper Tables 1 & 2.
+
+    Samples epicenter offsets a ~ U[0, W)^M per run (exact distribution of
+    frac((f(q)+b)/W)*W for integer raw hashes and b ~ U[0,W)) and averages
+    P_T(d).  Returns (len(d_values), len(t_values)).
+    """
+    rng = np.random.default_rng(seed)
+    out = np.zeros((len(d_values), len(t_values)))
+    tmax = max(t_values)
+    sets = build_template(num_hashes, width, tmax) if use_template else None
+    for _ in range(runs):
+        a = rng.uniform(0.0, width, size=num_hashes)
+        for di, d in enumerate(d_values):
+            if use_template:
+                x_all = np.concatenate([a, width - a])
+                deltas = perturbations_from_sets(sets, x_all)
+                out[di] += sequence_success(deltas, a, width, family, d, t_values)
+            else:
+                out[di] += exact_topk_success(a, width, family, d, t_values)
+    return out / runs

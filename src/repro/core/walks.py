@@ -1,0 +1,149 @@
+"""Random-walk generation for RW-LSH (paper Sect. 3.1).
+
+A raw hash function is parameterized by m mutually independent +/-1 random
+walks tau_1..tau_m.  Data coordinates are restricted to nonnegative *even*
+integers (paper Sect. 3.2 normalization), so we only ever evaluate the walk at
+even arguments.  We therefore store walks in *paired-step* form:
+
+    pair_j = step_{2j-1} + step_{2j}  in {-2, 0, +2}
+    tau(2t) = sum_{j<=t} pair_j       (exact, no approximation)
+
+Two equivalent evaluation forms are kept:
+
+  * ``prefix``  : P[..., t] = tau(2t), a (U2+1)-entry prefix-sum table per
+                  (hash fn, dim).  Evaluation = one gather per coordinate.
+                  This is the paper's own lookup-table implementation
+                  (Sect. 3.2 "implementation issue").
+  * ``pairs``   : the raw paired steps.  Evaluation = dot product with the
+                  thermometer (unary) encoding of s//2:
+                      tau_i(s_i) = <1{u < s_i/2}, pairs_i[u]>
+                  which turns hashing into an MXU matmul (see
+                  kernels/rw_hash.py).  This is our TPU adaptation.
+
+All generation is deterministic in the PRNG key; walks are *fixed after
+generation* exactly as the paper requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "WalkTable",
+    "make_walks",
+    "prefix_from_pairs",
+    "eval_prefix",
+    "eval_pairs_thermo",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WalkTable:
+    """Packed random walks for ``num_fns`` hash functions over ``dim`` dims.
+
+    pairs  : (num_fns, dim, U2)    int8   paired steps in {-2, 0, +2}
+    prefix : (num_fns, dim, U2+1)  int32  prefix sums tau(0), tau(2), ... tau(U)
+    """
+
+    pairs: jax.Array
+    prefix: jax.Array
+
+    @property
+    def num_fns(self) -> int:
+        return self.prefix.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.prefix.shape[1]
+
+    @property
+    def u2(self) -> int:
+        return self.prefix.shape[2] - 1
+
+    def tree_flatten(self):
+        return (self.pairs, self.prefix), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def make_walks(key: jax.Array, num_fns: int, dim: int, universe: int) -> WalkTable:
+    """Generate ``num_fns`` independent m-dim random walks.
+
+    ``universe`` is U, the max (even) coordinate value; tables cover
+    t in {0, 2, ..., U}, i.e. U2 = U//2 paired steps.
+    """
+    if universe % 2 != 0:
+        raise ValueError(f"universe must be even, got {universe}")
+    u2 = universe // 2
+    # Two independent +/-1 steps per paired step.  Drawing the pair value
+    # directly from its exact distribution {-2: 1/4, 0: 1/2, +2: 1/4}.
+    bits = jax.random.bernoulli(key, 0.5, (num_fns, dim, u2, 2))
+    steps = (2 * bits.astype(jnp.int8) - 1)
+    pairs = steps.sum(axis=-1).astype(jnp.int8)  # in {-2, 0, +2}
+    prefix = prefix_from_pairs(pairs)
+    return WalkTable(pairs=pairs, prefix=prefix)
+
+
+def prefix_from_pairs(pairs: jax.Array) -> jax.Array:
+    """(F, m, U2) paired steps -> (F, m, U2+1) int32 prefix sums, tau(0)=0."""
+    csum = jnp.cumsum(pairs.astype(jnp.int32), axis=-1)
+    zero = jnp.zeros(csum.shape[:-1] + (1,), jnp.int32)
+    return jnp.concatenate([zero, csum], axis=-1)
+
+
+def eval_prefix(walks: WalkTable, points: jax.Array) -> jax.Array:
+    """Gather-based raw hash: f[k](s) = sum_i prefix[k, i, s_i // 2].
+
+    points : (n, m) int32, nonnegative even, <= U.
+    returns: (n, F) int32 raw hash values.
+
+    Implemented as a scan over the m dimensions so peak memory is O(F*n)
+    per step, never the O(F*n*m) gathered tensor."""
+    t = (points >> 1).astype(jnp.int32)                       # (n, m)
+
+    def step(acc, inp):
+        pref_i, t_i = inp                                     # (F, U2+1), (n,)
+        acc = acc + jnp.take(pref_i, t_i, axis=1).T           # (n, F)
+        return acc, None
+
+    n = points.shape[0]
+    f_dim = walks.prefix.shape[0]
+    acc0 = jnp.zeros((n, f_dim), jnp.int32)
+    xs = (walks.prefix.transpose(1, 0, 2), t.T)               # (m, F, U2+1), (m, n)
+    out, _ = jax.lax.scan(step, acc0, xs)
+    return out
+
+
+def eval_pairs_thermo(walks: WalkTable, points: jax.Array) -> jax.Array:
+    """Thermometer-matmul raw hash (pure-jnp reference for the Pallas kernel).
+
+    f[k](s) = sum_i sum_u 1{u < s_i/2} * pairs[k, i, u]
+    """
+    t = (points >> 1).astype(jnp.int32)                        # (n, m)
+    u2 = walks.u2
+    ramp = jnp.arange(u2, dtype=jnp.int32)                     # (U2,)
+    thermo = (ramp[None, None, :] < t[:, :, None])             # (n, m, U2) bool
+    thermo = thermo.astype(jnp.float32).reshape(points.shape[0], -1)
+    mat = walks.pairs.astype(jnp.float32).reshape(walks.num_fns, -1)  # (F, m*U2)
+    return jnp.round(thermo @ mat.T).astype(jnp.int32)         # (n, F)
+
+
+def host_walks(seed: int, num_fns: int, dim: int, universe: int) -> Tuple[np.ndarray, np.ndarray]:
+    """NumPy twin of make_walks for host-side oracles (not bit-identical to
+    the JAX PRNG — used only where tests need an independent walk source)."""
+    rng = np.random.default_rng(seed)
+    u2 = universe // 2
+    steps = rng.choice(np.array([-1, 1], np.int8), size=(num_fns, dim, u2, 2))
+    pairs = steps.sum(axis=-1).astype(np.int8)
+    prefix = np.concatenate(
+        [np.zeros((num_fns, dim, 1), np.int32), np.cumsum(pairs, axis=-1, dtype=np.int32)],
+        axis=-1,
+    )
+    return pairs, prefix

@@ -1,0 +1,1 @@
+from . import ann_synthetic, lm_synthetic, normalize  # noqa: F401

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: tiled pairwise L1 distance.
+
+The L1 rerank is the FLOP hot spot of every ANN query (DESIGN.md Sect. 2).
+It is VPU work (abs-diff-reduce, no matmul), so the kernel's job is VMEM
+residency: stream (bq, bm) query tiles against (bn, bm) point tiles and
+accumulate partial sums over the m-grid axis, never touching HBM for the
+(bq, bn, bm) intermediate.
+
+Tiling defaults (v5e, 128-lane VPU):
+  bq=8 (sublane), bn=128 (lane), bm=512 -> intermediate 8*128*512*4B = 2 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["l1_distance_pallas", "l1_distance_rows_pallas"]
+
+
+def _acc_dtype(dtype):
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def _l1_kernel(q_ref, x_ref, o_ref):
+    k = pl.program_id(2)
+    acc = _acc_dtype(q_ref.dtype)
+    q = q_ref[...].astype(acc)                       # (bq, bm)
+    x = x_ref[...].astype(acc)                       # (bn, bm)
+    part = jnp.abs(q[:, None, :] - x[None, :, :]).sum(axis=-1)  # (bq, bn)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "bm", "interpret"))
+def l1_distance_pallas(
+    queries: jax.Array, points: jax.Array,
+    bq: int = 8, bn: int = 128, bm: int = 512, interpret: bool = False,
+) -> jax.Array:
+    """(Q, m), (N, m) -> (Q, N).  Pads every axis to tile multiples."""
+    qn, m = queries.shape
+    n = points.shape[0]
+    bm = min(bm, max(128, m))
+    pq, pn, pm = (-qn) % bq, (-n) % bn, (-m) % bm
+    qp = jnp.pad(queries, ((0, pq), (0, pm)))
+    xp = jnp.pad(points, ((0, pn), (0, pm)))
+    grid = (qp.shape[0] // bq, xp.shape[0] // bn, qp.shape[1] // bm)
+    out = pl.pallas_call(
+        _l1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bm), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bm), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (qp.shape[0], xp.shape[0]), _acc_dtype(queries.dtype)),
+        interpret=interpret,
+    )(qp, xp)
+    return out[:qn, :n]
+
+
+def _l1_rows_kernel(q_ref, x_ref, o_ref):
+    k = pl.program_id(1)
+    acc = _acc_dtype(q_ref.dtype)
+    q = q_ref[...].astype(acc)                       # (bq, bm)
+    x = x_ref[...].astype(acc)                       # (bq, bc, bm)
+    part = jnp.abs(x - q[:, None, :]).sum(axis=-1)   # (bq, bc)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bm", "interpret"))
+def l1_distance_rows_pallas(
+    queries: jax.Array, rows: jax.Array,
+    bq: int = 8, bm: int = 512, interpret: bool = False,
+) -> jax.Array:
+    """(Q, m), (Q, C, m) -> (Q, C) per-query candidate distances."""
+    qn, m = queries.shape
+    c = rows.shape[1]
+    bm = min(bm, max(128, m))
+    pq, pm = (-qn) % bq, (-m) % bm
+    qp = jnp.pad(queries, ((0, pq), (0, pm)))
+    xp = jnp.pad(rows, ((0, pq), (0, 0), (0, pm)))
+    grid = (qp.shape[0] // bq, qp.shape[1] // bm)
+    out = pl.pallas_call(
+        _l1_rows_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bm), lambda i, k: (i, k)),
+            pl.BlockSpec((bq, c, bm), lambda i, k: (i, 0, k)),
+        ],
+        out_specs=pl.BlockSpec((bq, c), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], c), _acc_dtype(queries.dtype)),
+        interpret=interpret,
+    )(qp, xp)
+    return out[:qn]

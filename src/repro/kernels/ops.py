@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute under ``interpret=True`` —
+the kernel body runs in Python per grid step with identical semantics; on
+TPU the same call sites compile to Mosaic.  ``interpret`` is resolved from
+the backend automatically; force it with ``REPRO_PALLAS_INTERPRET=0/1``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from .l1_distance import l1_distance_pallas, l1_distance_rows_pallas
+from .rw_hash import rw_hash_pallas
+from .topk_merge import topk_merge_pallas
+
+__all__ = ["l1_distance", "l1_distance_rows", "rw_hash", "topk_merge", "use_interpret"]
+
+
+def use_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def l1_distance(queries, points, **kw):
+    return l1_distance_pallas(queries, points, interpret=use_interpret(), **kw)
+
+
+def l1_distance_rows(queries, rows, **kw):
+    return l1_distance_rows_pallas(queries, rows, interpret=use_interpret(), **kw)
+
+
+def rw_hash(pairs, points, **kw):
+    return rw_hash_pallas(pairs, points, interpret=use_interpret(), **kw)
+
+
+def topk_merge(da, ia, db, ib, **kw):
+    return topk_merge_pallas(da, ia, db, ib, interpret=use_interpret(), **kw)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth the kernels are tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["l1_distance", "l1_distance_rows", "rw_hash", "topk_merge"]
+
+
+def l1_distance(queries: jax.Array, points: jax.Array) -> jax.Array:
+    """(Q, m), (N, m) -> (Q, N) pairwise L1 distances.
+
+    Integer inputs accumulate in int32 (exact); float in float32.
+    """
+    acc = jnp.int32 if jnp.issubdtype(queries.dtype, jnp.integer) else jnp.float32
+    diff = queries[:, None, :].astype(acc) - points[None, :, :].astype(acc)
+    return jnp.abs(diff).sum(axis=-1)
+
+
+def l1_distance_rows(queries: jax.Array, rows: jax.Array) -> jax.Array:
+    """(Q, m), (Q, C, m) -> (Q, C) per-query candidate L1 distances."""
+    acc = jnp.int32 if jnp.issubdtype(queries.dtype, jnp.integer) else jnp.float32
+    diff = rows.astype(acc) - queries[:, None, :].astype(acc)
+    return jnp.abs(diff).sum(axis=-1)
+
+
+def rw_hash(pairs: jax.Array, points: jax.Array) -> jax.Array:
+    """Random-walk raw hash via thermometer inner product.
+
+    pairs  : (F, m, U2) int8 paired walk steps
+    points : (n, m) int32 nonnegative even coordinates (<= 2*U2)
+    returns: (n, F) int32,  f[n,k] = sum_{i,u} 1{u < points[n,i]//2} pairs[k,i,u]
+    """
+    t = (points >> 1).astype(jnp.int32)
+    u2 = pairs.shape[-1]
+    thermo = (jnp.arange(u2, dtype=jnp.int32)[None, None, :] < t[:, :, None])
+    return jnp.einsum(
+        "niu,kiu->nk", thermo.astype(jnp.int32), pairs.astype(jnp.int32),
+    ).astype(jnp.int32)
+
+
+def topk_merge(da: jax.Array, ia: jax.Array, db: jax.Array, ib: jax.Array):
+    """Merge two per-row ascending top-k lists into one ascending top-k.
+
+    da, db : (Q, k) distances sorted ascending; ia, ib: matching ids.
+    Returns (d, i) of the k smallest of the union, ascending.
+    """
+    k = da.shape[-1]
+    d = jnp.concatenate([da, db], axis=-1)
+    i = jnp.concatenate([ia, ib], axis=-1)
+    order = jnp.argsort(d, axis=-1, stable=True)
+    return (jnp.take_along_axis(d, order, axis=-1)[..., :k],
+            jnp.take_along_axis(i, order, axis=-1)[..., :k])

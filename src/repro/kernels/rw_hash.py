@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused thermometer-encode + random-walk matmul.
+
+The paper evaluates f(s) = sum_i tau_i(s_i) by table lookups — a gather, the
+worst possible access pattern on TPU.  Our adaptation (DESIGN.md Sect. 2):
+a prefix sum *is* a dot product with the step vector,
+
+    tau_i(s_i) = sum_u 1{u < s_i/2} * pairs_i[u],
+
+so hashing a batch against F hash functions is a (n, m*U2) x (m*U2, F)
+matmul whose left operand is a 0/1 thermometer code.  The kernel generates
+the thermometer tile on the fly in VMEM (iota-compare against the coordinate
+tile) and feeds the MXU — the (n, m*U2) code never exists in HBM.
+
+Tiling: grid (n/bn, F/bf, m/bi); per step the kernel builds a
+(bn, bi*U2) fp32 tile and contracts with a (bi*U2, bf) tile of steps.
+Defaults bn=128, bf=128, bi*U2 = 512 -> operand tiles 256 KB each.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rw_hash_pallas"]
+
+
+def _rw_hash_kernel(t_ref, p_ref, o_ref, *, u2: int):
+    k = pl.program_id(2)
+    t = t_ref[...]                                     # (bn, bi) int32
+    bn, bi = t.shape
+    ramp = jax.lax.broadcasted_iota(jnp.int32, (bi, u2), 1)
+    thermo = (ramp[None, :, :] < t[:, :, None]).astype(jnp.float32)
+    thermo = thermo.reshape(bn, bi * u2)               # (bn, bi*U2)
+    steps = p_ref[...].astype(jnp.float32)             # (bf, bi, u2)
+    bf = steps.shape[0]
+    steps = steps.reshape(bf, bi * u2)
+    part = jax.lax.dot_general(
+        thermo, steps,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (bn, bf)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bf", "bi", "interpret"))
+def rw_hash_pallas(
+    pairs: jax.Array, points: jax.Array,
+    bn: int = 128, bf: int = 128, bi: int = 0, interpret: bool = False,
+) -> jax.Array:
+    """pairs (F, m, U2) int8, points (n, m) int32 even -> (n, F) int32."""
+    f, m, u2 = pairs.shape
+    n = points.shape[0]
+    if bi <= 0:
+        bi = max(1, 512 // u2)
+    t = (points >> 1).astype(jnp.int32)
+    pn, pf, pm = (-n) % bn, (-f) % bf, (-m) % bi
+    tp = jnp.pad(t, ((0, pn), (0, pm)))
+    pp = jnp.pad(pairs, ((0, pf), (0, pm), (0, 0)))
+    grid = (tp.shape[0] // bn, pp.shape[0] // bf, tp.shape[1] // bi)
+    out = pl.pallas_call(
+        functools.partial(_rw_hash_kernel, u2=u2),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bi), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bf, bi, u2), lambda i, j, k: (j, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bf), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tp.shape[0], pp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(tp, pp)
+    return jnp.round(out[:n, :f]).astype(jnp.int32)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: two-way sorted top-k merge (bitonic).
+
+Used by the distributed query path's ring merge (DESIGN.md Sect. 4): each of
+the R dataset shards holds an ascending per-query top-k; a ring of R-1
+collective-permute steps each merges two sorted lists.  Merging two ascending
+k-lists is one compare-exchange against the reversed partner (the k smallest
+of a bitonic 2k sequence) followed by log2(k) bitonic clean-up stages —
+O(k log k) compares, fully vectorized, no data-dependent control flow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["topk_merge_pallas"]
+
+
+def _merge_kernel(da_ref, ia_ref, db_ref, ib_ref, do_ref, io_ref, *, k: int):
+    da, ia = da_ref[...], ia_ref[...]                  # (bq, k) asc
+    db, ib = db_ref[...], ib_ref[...]
+    # Stage 0: k smallest of the bitonic concat(a, reverse(b)).
+    dbr, ibr = db[:, ::-1], ib[:, ::-1]
+    take_a = da <= dbr
+    d = jnp.where(take_a, da, dbr)                     # bitonic, holds k smallest
+    i = jnp.where(take_a, ia, ibr)
+    # Bitonic clean-up: log2(k) stages.
+    s = k // 2
+    while s >= 1:
+        dr = d.reshape(d.shape[0], k // (2 * s), 2, s)
+        ir = i.reshape(i.shape[0], k // (2 * s), 2, s)
+        lo_d, hi_d = dr[:, :, 0, :], dr[:, :, 1, :]
+        lo_i, hi_i = ir[:, :, 0, :], ir[:, :, 1, :]
+        swap = lo_d > hi_d
+        new_lo_d = jnp.where(swap, hi_d, lo_d)
+        new_hi_d = jnp.where(swap, lo_d, hi_d)
+        new_lo_i = jnp.where(swap, hi_i, lo_i)
+        new_hi_i = jnp.where(swap, lo_i, hi_i)
+        d = jnp.stack([new_lo_d, new_hi_d], axis=2).reshape(d.shape[0], k)
+        i = jnp.stack([new_lo_i, new_hi_i], axis=2).reshape(i.shape[0], k)
+        s //= 2
+    do_ref[...] = d
+    io_ref[...] = i
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def topk_merge_pallas(
+    da: jax.Array, ia: jax.Array, db: jax.Array, ib: jax.Array,
+    bq: int = 8, interpret: bool = False,
+):
+    """Merge ascending (Q, k) lists.  k is padded to a power of two."""
+    q, k = da.shape
+    kp = 1 << (k - 1).bit_length()
+    big = (jnp.iinfo(jnp.int32).max // 2 if jnp.issubdtype(da.dtype, jnp.integer)
+           else jnp.inf)
+    if kp != k:
+        pad = ((0, 0), (0, kp - k))
+        da = jnp.pad(da, pad, constant_values=big)
+        db = jnp.pad(db, pad, constant_values=big)
+        ia = jnp.pad(ia, pad, constant_values=-1)
+        ib = jnp.pad(ib, pad, constant_values=-1)
+    pq = (-q) % bq
+    if pq:
+        da, db = (jnp.pad(x, ((0, pq), (0, 0)), constant_values=big) for x in (da, db))
+        ia, ib = (jnp.pad(x, ((0, pq), (0, 0)), constant_values=-1) for x in (ia, ib))
+    grid = (da.shape[0] // bq,)
+    spec = pl.BlockSpec((bq, kp), lambda i: (i, 0))
+    do, io = pl.pallas_call(
+        functools.partial(_merge_kernel, k=kp),
+        grid=grid,
+        in_specs=[spec] * 4,
+        out_specs=[spec] * 2,
+        out_shape=[
+            jax.ShapeDtypeStruct(da.shape, da.dtype),
+            jax.ShapeDtypeStruct(ia.shape, ia.dtype),
+        ],
+        interpret=interpret,
+    )(da, ia, db, ib)
+    return do[:q, :k], io[:q, :k]

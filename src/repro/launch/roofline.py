@@ -1,0 +1,143 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs            / peak_FLOPs_chip      (per-chip program)
+    memory     = HLO_bytes_accessed   / HBM_bw_chip
+    collective = collective_bytes     / link_bw_chip
+
+cost_analysis() of an SPMD-partitioned executable reports the *per-device*
+program, so no further division by chip count is needed.  collective bytes
+are parsed from the optimized HLO text (result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+which for ring implementations is within 2x of wire bytes — noted in
+EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e hardware constants (assignment sheet)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+LINK_BW = 50e9           # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "fp8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.1 = bf16[2,1024,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9_]+)\[([\d,]*)\][^ ]*\s+(" + "|".join(_COLLECTIVES) + r")\b")
+# tuple-result collectives:  = (bf16[...], bf16[...]) all-to-all(...)
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+(" + "|".join(_COLLECTIVES) + r")\b")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over the HLO module."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            inner, kind = m.groups()
+            for dm in _SHAPE_RE.finditer(inner):
+                out[kind] += _shape_bytes(*dm.groups())
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    peak_bytes_device: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def summary(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops": self.flops,
+            "bytes": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes,
+            "peak_bytes_device": self.peak_bytes_device,
+            "coll_breakdown": {k: v for k, v in self.coll_breakdown.items() if v},
+        }
+
+
+def analyze(compiled) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                     + getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = float("nan")
+    return Roofline(flops=flops, bytes_accessed=bytes_accessed,
+                    coll_bytes=float(sum(coll.values())),
+                    coll_breakdown=coll, peak_bytes_device=peak)
+
+
+def model_flops(cfg, tokens: int, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for training;
+    2*N*D for a forward/decode step."""
+    n = cfg.param_count()
+    if cfg.n_experts:
+        fe = cfg.d_ff_expert or cfg.d_ff
+        n_moe_layers = cfg.n_layers // cfg.moe_period
+        inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * 3 * cfg.d_model * fe
+        n = n - inactive
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

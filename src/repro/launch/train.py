@@ -1,0 +1,91 @@
+"""End-to-end training launcher.
+
+CPU-scale example (deliverable b): train a reduced config for a few hundred
+steps with checkpoint/restart. The same step function + sharding rules lower
+on the production mesh (that path is exercised by dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --resume
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_config, get_reduced
+from repro.data.lm_synthetic import LmDataConfig, batch_at_step
+from repro.models import model as model_lib
+from repro.models import transformer as tf
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    opt_cfg = OptConfig(lr=args.lr, moment_dtype=cfg.opt_moment_dtype,
+                        warmup_steps=20)
+    data_cfg = LmDataConfig(vocab=cfg.vocab, global_batch=args.batch,
+                            seq_len=args.seq)
+
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = init_opt_state(params, opt_cfg)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, args.microbatches))
+    start = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        if args.resume and mgr.latest_step() is not None:
+            start, (params, opt_state) = mgr.restore_latest((params, opt_state))
+            print(f"resumed from step {start}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        tokens, labels = batch_at_step(data_cfg, step)
+        batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        if cfg.frontend or cfg.kind == "encdec":
+            batch["frontend"] = jnp.zeros(
+                (args.batch, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({dt / max(step - start + 1, 1):.2f}s/step)")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, (params, opt_state), blocking=False)
+    if mgr:
+        mgr.save(args.steps, (params, opt_state))
+        mgr.wait()
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    print(f"loss first10={first:.4f} last10={last:.4f} "
+          f"improved={'yes' if last < first else 'NO'}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,293 @@
+"""Transformer building blocks (pure functions over param pytrees).
+
+Covers every variant the assigned architectures need: RMSNorm, RoPE,
+GQA/MQA/MHA attention with sliding-window masks + logit softcapping +
+cross-attention, SwiGLU/GeGLU MLPs, and GShard-style group-limited MoE
+with capacity dropping (dispatch/combine einsums -> all-to-all under pjit).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Array = jax.Array
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# Norms / embeddings / positional
+# --------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (B, S, H, hd), positions (B, S) -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+def attention_chunked(
+    q: Array, k: Array, v: Array, *,
+    q_pos: Array, window: int, cap: float, chunk: int,
+) -> Array:
+    """Block-causal chunked attention for training (flash-style).
+
+    Statically skips every fully-masked (above-diagonal) KV block: the
+    classic 2x on attention FLOPs for causal training, and the (S, T) score
+    matrix never exists — only (chunk, chunk) tiles (EXPERIMENTS.md §Perf
+    llama4 iteration 1).  Online-softmax over KV blocks, f32 stats.
+    Sliding-window blocks entirely outside the window are also skipped.
+    """
+    b, s, nh, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    assert s == t, "chunked path is for self-attention training"
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nq = s // c
+    g = nh // kv
+    scale = 1.0 / float(hd) ** 0.5
+    qg = q.reshape(b, nq, c, kv, g, hd)
+    kb = k.reshape(b, nq, c, kv, hd)
+    vb = v.reshape(b, nq, c, kv, hd)
+    pos_b = q_pos.reshape(b, nq, c)
+
+    out_blocks = []
+    for qi in range(nq):
+        qs = qg[:, qi]                                   # (b, c, kv, g, hd)
+        qp = pos_b[:, qi]                                # (b, c)
+        lo = 0
+        if window > 0:  # first KV block that can still be inside the window
+            lo = max(0, (qi * c - (window - 1) - (c - 1)) // c)
+        n_vis = qi - lo + 1
+
+        def step(carry, inp):
+            m, l, acc = carry
+            kc, vc, kp = inp                             # (b,c,kv,hd),(b,c)
+            sc = jnp.einsum("bikgh,bjkh->bkgij", qs, kc,
+                            preferred_element_type=jnp.float32) * scale
+            sc = softcap(sc, cap)
+            msk = qp[:, :, None] >= kp[:, None, :]
+            if window > 0:
+                msk &= (qp[:, :, None] - kp[:, None, :]) < window
+            sc = jnp.where(msk[:, None, None, :, :], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgij,bjkh->bkgih", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, c), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, c), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, c, hd), jnp.float32)
+        xs = (kb[:, lo:qi + 1].swapaxes(0, 1), vb[:, lo:qi + 1].swapaxes(0, 1),
+              pos_b[:, lo:qi + 1].swapaxes(0, 1))
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs)
+        o = acc / jnp.maximum(l[..., None], 1e-37)       # (b,kv,g,c,hd)
+        out_blocks.append(o.transpose(0, 3, 1, 2, 4).reshape(b, c, nh, hd))
+    return jnp.concatenate(out_blocks, axis=1).astype(q.dtype)
+
+
+def attention(
+    q: Array, k: Array, v: Array, *,
+    q_pos: Array, kv_pos: Array, kv_valid: Optional[Array],
+    causal: bool, window: int, cap: float,
+) -> Array:
+    """Grouped-query attention.
+
+    q (B, S, NH, hd); k, v (B, T, KV, hd); q_pos (B, S); kv_pos (B, T);
+    kv_valid optional (B, T) bool (cache slots written so far).
+    """
+    b, s, nh, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = nh // kv
+    # bf16 operands, f32 accumulation (MXU pattern).  Do NOT pre-cast q/k to
+    # f32: that makes every backward cotangent on the residual stream f32 and
+    # doubles the tensor-parallel all-reduce bytes (§Perf gemma-7b iter 5).
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = softcap(scores, cap)
+    mask = jnp.ones((b, s, t), bool)
+    if causal:
+        mask &= q_pos[:, :, None] >= kv_pos[:, None, :]
+    if window > 0:
+        mask &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, nh, hd).astype(q.dtype)
+
+
+def attn_block(
+    p: dict, x: Array, cfg: ModelConfig, *,
+    positions: Array, cache: Optional[dict], cache_pos0: Optional[Array],
+    window: int, causal: bool = True,
+    xattn_kv: Optional[Tuple[Array, Array]] = None,
+    xattn_valid: Optional[Array] = None,
+) -> Tuple[Array, Optional[dict]]:
+    """Self-attention (+ optional KV cache update) with pre-norm residual.
+
+    cache: {'k': (B, Smax, KV, hd), 'v': ...} or None (training: keys/values
+    are the in-sequence projections).  cache_pos0: scalar write offset.
+    """
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dnh->bsnh", h, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", h, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", h, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is None:
+        if causal and cfg.attn_chunk > 0 and x.shape[1] > cfg.attn_chunk:
+            out = attention_chunked(q, k, v, q_pos=positions, window=window,
+                                    cap=cfg.attn_softcap, chunk=cfg.attn_chunk)
+            y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+            x = x + y
+            if xattn_kv is not None:
+                raise NotImplementedError("chunked path: no cross-attn")
+            return x, None
+        kv_pos, kv_valid, kk, vv = positions, None, k, v
+    else:
+        pos0 = cache_pos0
+        kk = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0))
+        vv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0))
+        smax = kk.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(smax, dtype=jnp.int32)[None], (x.shape[0], smax))
+        kv_valid = kv_pos < (pos0 + x.shape[1])
+        new_cache = {"k": kk, "v": vv}
+    out = attention(q, kk, vv, q_pos=positions, kv_pos=kv_pos, kv_valid=kv_valid,
+                    causal=causal, window=window, cap=cfg.attn_softcap)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    x = x + y
+    if xattn_kv is not None:
+        h = rms_norm(x, p["xln"], cfg.norm_eps)
+        cq = jnp.einsum("bsd,dnh->bsnh", h, p["cwq"])
+        ck, cv = xattn_kv
+        xpos = jnp.broadcast_to(jnp.arange(ck.shape[1], dtype=jnp.int32)[None],
+                                (x.shape[0], ck.shape[1]))
+        out = attention(cq, ck, cv, q_pos=positions, kv_pos=xpos,
+                        kv_valid=xattn_valid, causal=False, window=0, cap=0.0)
+        x = x + jnp.einsum("bsnh,nhd->bsd", out, p["cwo"])
+    return x, new_cache
+
+
+def cross_kv(p: dict, enc_out: Array) -> Tuple[Array, Array]:
+    """Project encoder output to cross-attention K/V once per sequence."""
+    ck = jnp.einsum("bsd,dnh->bsnh", enc_out, p["cwk"])
+    cv = jnp.einsum("bsd,dnh->bsnh", enc_out, p["cwv"])
+    return ck, cv
+
+
+# --------------------------------------------------------------------------
+# Dense MLPs
+# --------------------------------------------------------------------------
+
+def _act(gate: Array, up: Array, kind: str) -> Array:
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    raise ValueError(kind)
+
+
+def mlp_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gu = jnp.einsum("bsd,dcf->bscf", h, p["wi"])            # (B, S, 2, F)
+    act = _act(gu[..., 0, :], gu[..., 1, :], cfg.act)
+    return x + jnp.einsum("bsf,fd->bsd", act, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# MoE (GShard-style, group-limited, capacity-dropped)
+# --------------------------------------------------------------------------
+
+def moe_capacity(cfg: ModelConfig, group: int) -> int:
+    """Slots per (group, expert).  Rounded up to a multiple of 2 only:
+    rounding to 4 cost +20% expert AND dispatch compute at C=10
+    (§Perf llama4 iteration B2/B3 — dispatch/combine einsums scale with C)."""
+    cap = -(-group * cfg.top_k * cfg.capacity_factor // max(cfg.n_experts, 1))
+    cap = int(cap)
+    return max(4, cap + (cap & 1))
+
+
+def moe_block(p: dict, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Mixture-of-experts FFN.  Returns (output, aux_loss).
+
+    Tokens are processed in routing groups of cfg.moe_group; each expert
+    accepts at most C tokens per group (excess dropped — GShard semantics).
+    Experts live on the 'model' mesh axis; the (G, E, C, D) dispatch einsum
+    is what GSPMD turns into the all-to-all.
+    """
+    b, s, d = x.shape
+    ep, k = cfg.n_experts_padded, cfg.top_k
+    tokens = b * s
+    g = min(cfg.moe_group, tokens)
+    while tokens % g:       # largest divisor <= moe_group (static shapes)
+        g -= 1
+    ng = tokens // g
+    cap = moe_capacity(cfg, g)
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    xt = h.reshape(ng, g, d)
+
+    logits = jnp.einsum("ntd,de->nte", xt, p["router"]).astype(jnp.float32)
+    pad_mask = jnp.arange(ep) >= cfg.n_experts
+    logits = jnp.where(pad_mask[None, None, :], NEG_INF, logits)
+    top_w, top_e = jax.lax.top_k(logits, k)                  # (N, g, K)
+    top_w = jax.nn.softmax(top_w, axis=-1)
+
+    # slot assignment: position of each (token, k) among claims on expert e
+    onehot = jax.nn.one_hot(top_e, ep, dtype=jnp.float32)    # (N, g, K, E)
+    # priority: k-index major, token minor (greedy like GShard)
+    claims = onehot.transpose(0, 2, 1, 3).reshape(ng, k * g, ep)
+    pos = (jnp.cumsum(claims, axis=1) - claims)              # (N, K*g, E)
+    pos = pos.reshape(ng, k, g, ep).transpose(0, 2, 1, 3)    # (N, g, K, E)
+    slot = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # (N, g, K)
+    keep = (slot < cap) & (top_w > 0)
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32) * keep[..., None]
+    # dispatch (N, g, E, C); combine adds routing weights
+    dispatch = jnp.einsum("ntke,ntkc->ntec", onehot, slot_oh)
+    combine = jnp.einsum("ntke,ntkc,ntk->ntec", onehot, slot_oh, top_w)
+
+    xe = jnp.einsum("ntec,ntd->necd", dispatch.astype(xt.dtype), xt)  # (N,E,C,D)
+    gu = jnp.einsum("necd,eduf->necuf", xe, p["wi"])         # (N,E,C,2,F)
+    act = _act(gu[..., 0, :], gu[..., 1, :], cfg.act)
+    ye = jnp.einsum("necf,efd->necd", act, p["wo"])
+    y = jnp.einsum("necd,ntec->ntd", ye, combine.astype(xt.dtype))
+
+    # load-balance aux loss (Switch/GShard): E * sum(frac_tokens * frac_prob)
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_prob = probs.mean(axis=(0, 1))
+    frac_tok = onehot.mean(axis=(0, 1, 2)) * k
+    aux = cfg.n_experts * jnp.sum(frac_prob * frac_tok)
+    return x + y.reshape(b, s, d).astype(x.dtype), aux

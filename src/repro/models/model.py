@@ -1,0 +1,186 @@
+"""Top-level model API: loss / prefill / decode across all families.
+
+serve_step (decode) and train_step shapes follow the assignment:
+  * train    : tokens (B, S) -> next-token CE loss
+  * prefill  : tokens (B, S) -> logits (+ initialized caches)
+  * decode   : one new token against a KV/SSM cache of length S_max
+Modality frontends ('patch' for phi-3-vision, 'frames' for seamless) are
+STUBS per the assignment: callers supply precomputed embeddings at d_model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import transformer as tf
+
+Array = jax.Array
+
+
+def init_params(key, cfg: ModelConfig):
+    return tf.init_params(key, cfg)
+
+
+def _positions(b, s, offset=0):
+    return jnp.broadcast_to(
+        offset + jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def _embed(params, cfg, tokens):
+    scale = jnp.sqrt(cfg.d_model).astype(params["embed"].dtype)
+    return params["embed"][tokens] * scale
+
+
+def _stack_forward(params, cfg, x, positions, caches=None, cache_pos0=None,
+                   enc_kv=None, enc_valid=None):
+    if cfg.kind == "hybrid":
+        return tf.hybrid_stack(params, cfg, x, positions=positions,
+                               caches=caches, cache_pos0=cache_pos0)
+    if cfg.kind == "encdec":
+        return tf.encdec_decoder_stack(params, cfg, x, positions=positions,
+                                       enc_kv=enc_kv, enc_valid=enc_valid,
+                                       caches=caches, cache_pos0=cache_pos0)
+    return tf.decoder_stack(params, cfg, x, positions=positions,
+                            caches=caches, cache_pos0=cache_pos0)
+
+
+# --------------------------------------------------------------------------
+# Training loss
+# --------------------------------------------------------------------------
+
+def train_loss(params, cfg: ModelConfig, batch: Dict[str, Array]) -> Tuple[Array, Dict]:
+    """Next-token cross-entropy (+ MoE aux).  batch keys:
+    'tokens', 'labels' (B, S) int32; optional 'frontend' (B, P, D) embeds."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens)
+    valid = jnp.ones_like(labels, bool)
+    enc_kv = enc_valid = None
+
+    if cfg.kind == "encdec":
+        enc_out = tf.encoder_stack(params, cfg, batch["frontend"].astype(x.dtype))
+        enc_kv = tf.encode_cross_kv(params, cfg, enc_out)
+        enc_valid = None
+        positions = _positions(b, s)
+    elif cfg.frontend:
+        fe = batch["frontend"].astype(x.dtype)               # (B, P, D)
+        x = jnp.concatenate([fe, x], axis=1)
+        pad_lab = jnp.zeros((b, fe.shape[1]), labels.dtype)
+        labels = jnp.concatenate([pad_lab, labels], axis=1)
+        valid = jnp.concatenate(
+            [jnp.zeros((b, fe.shape[1]), bool), valid], axis=1)
+        positions = _positions(b, x.shape[1])
+    else:
+        positions = _positions(b, s)
+
+    x, _, aux = _stack_forward(params, cfg, x, positions,
+                               enc_kv=enc_kv, enc_valid=enc_valid)
+    logits = tf.logits_from_hidden(params, cfg, x)
+    # stable logsumexp with f32 accumulation (logits may be bf16)
+    lmax = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    expsum = jnp.sum(jnp.exp((logits - lmax).astype(jnp.float32)), axis=-1)
+    logz = jnp.log(expsum) + lmax[..., 0].astype(jnp.float32)
+    # Label logit via a masked reduction over the vocab axis.  NOT
+    # take_along_axis: a gather over the tensor-parallel (vocab-sharded) dim
+    # makes GSPMD reshard the full fp32 logits from batch-sharded to
+    # batch-replicated (EXPERIMENTS.md §Perf, gemma-7b iteration 2: that one
+    # op was 200 GB/device of all-gather+all-reduce).  The masked reduce is
+    # elementwise in vocab, so only (B, S) partial sums cross the mesh.
+    vocab_iota = jnp.arange(cfg.vocab_padded, dtype=jnp.int32)
+    label_mask = vocab_iota[None, None, :] == labels[..., None].astype(jnp.int32)
+    lab_logit = jnp.sum(
+        jnp.where(label_mask, logits, jnp.zeros((), logits.dtype)),
+        axis=-1).astype(jnp.float32)
+    nll = (logz - lab_logit) * valid
+    loss = nll.sum() / jnp.maximum(valid.sum(), 1)
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"loss": loss, "aux": aux, "tokens": valid.sum()}
+
+
+# --------------------------------------------------------------------------
+# Caches
+# --------------------------------------------------------------------------
+
+def make_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Abstract-friendly cache allocation (works under jax.eval_shape)."""
+    kv, hd = cfg.n_kv, cfg.head_dim
+
+    def attn_cache():
+        return {"k": jnp.zeros((batch, max_len, kv, hd), dtype),
+                "v": jnp.zeros((batch, max_len, kv, hd), dtype)}
+
+    def mamba_cache():
+        return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                                   cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state), dtype),
+                "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                                  cfg.ssm_headdim), jnp.float32)}
+
+    if cfg.kind == "hybrid":
+        n_shared = (cfg.n_layers + cfg.hybrid_attn_period - 1) // cfg.hybrid_attn_period
+        return {
+            "mamba": _stacked(mamba_cache, cfg.n_layers),
+            "shared": {"k": jnp.zeros((n_shared, batch, max_len, kv, hd), dtype),
+                       "v": jnp.zeros((n_shared, batch, max_len, kv, hd), dtype)},
+        }
+    if cfg.kind == "encdec":
+        return _stacked(attn_cache, cfg.n_layers)
+    kinds = cfg.sub_block_kinds()
+
+    def group_cache():
+        out = {}
+        for j, kind in enumerate(kinds):
+            out[f"sub{j}"] = mamba_cache() if kind == "mamba" else attn_cache()
+        return out
+
+    return _stacked(group_cache, cfg.n_groups)
+
+
+def _stacked(fn, n):
+    one = fn()
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy()
+                        if hasattr(a, "shape") else a, one)
+
+
+# --------------------------------------------------------------------------
+# Prefill & decode
+# --------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Array]):
+    """Forward over the prompt; returns (logits, caches?).  For the dry-run
+    we lower the logits-only variant (caches=None)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens)
+    enc_kv = enc_valid = None
+    if cfg.kind == "encdec":
+        enc_out = tf.encoder_stack(params, cfg, batch["frontend"].astype(x.dtype))
+        enc_kv = tf.encode_cross_kv(params, cfg, enc_out)
+        positions = _positions(b, s)
+    elif cfg.frontend:
+        fe = batch["frontend"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+        positions = _positions(b, x.shape[1])
+    else:
+        positions = _positions(b, s)
+    x, _, _ = _stack_forward(params, cfg, x, positions,
+                             enc_kv=enc_kv, enc_valid=enc_valid)
+    return tf.logits_from_hidden(params, cfg, x[:, -1:, :])
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens: Array, pos0: Array,
+                enc_kv=None):
+    """One decode step.  tokens (B, 1); pos0 scalar int32 = tokens so far.
+
+    Returns (logits (B, 1, V), new_caches)."""
+    b = tokens.shape[0]
+    x = _embed(params, cfg, tokens)
+    positions = jnp.broadcast_to(pos0[None, None], (b, 1)).astype(jnp.int32)
+    x, new_caches, _ = _stack_forward(params, cfg, x, positions,
+                                      caches=caches, cache_pos0=pos0,
+                                      enc_kv=enc_kv,
+                                      enc_valid=None)
+    logits = tf.logits_from_hidden(params, cfg, x)
+    return logits, new_caches

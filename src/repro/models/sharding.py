@@ -1,0 +1,139 @@
+"""Sharding rules: param/batch/cache PartitionSpecs per (config, mesh).
+
+Policy (DESIGN.md Sect. 4):
+  * batch  -> the data axes ('pod','data') when divisible, else replicated
+    (long_500k decode has batch 1 -> replicated batch, KV heads on 'model').
+  * tensor-parallel ('model'): attention heads / FFN hidden / experts /
+    padded vocab — each dim is sharded only if divisible by the axis size,
+    else replicated (heads stay semantically exact: no head padding in the
+    baseline; see EXPERIMENTS.md §Perf for the padded-heads variant).
+  * fsdp (cfg.fsdp): parameters additionally sharded over the data axes on
+    their d_model dim (ZeRO-3 style; GSPMD inserts the all-gathers).
+  * Mamba block params are replicated in the baseline (models using them are
+    <= 1.3B); activations still shard by batch.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+__all__ = ["axis_sizes", "param_specs", "batch_specs", "cache_specs",
+           "to_shardings", "data_axes"]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_sizes(mesh: Mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ndp = int(np.prod([sizes[a] for a in data_axes(mesh)]))
+    return sizes, ndp, sizes.get("model", 1)
+
+
+def _div(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def param_specs(cfg: ModelConfig, params: Any, mesh: Mesh):
+    """Tree of PartitionSpec matching the param tree (by leaf path)."""
+    _, ndp, tp = axis_sizes(mesh)
+    dp = data_axes(mesh)
+    fsdp = dp if cfg.fsdp else None
+
+    def fs(dim_size):  # fsdp spec entry for a d_model-like dim
+        return fsdp if (cfg.fsdp and _div(dim_size, ndp)) else None
+
+    def tpx(dim_size):  # tensor-parallel spec entry
+        return "model" if _div(dim_size, tp) else None
+
+    def leaf_spec(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = names[-1]
+        parent = names[-2] if len(names) > 1 else ""
+        shape = leaf.shape
+        stacked = 1 if any(n in ("blocks", "enc_blocks", "dec_blocks") for n in names) else 0
+        sh = shape[stacked:]  # per-layer shape
+        base: tuple
+        if name == "embed":
+            # vocab on 'model' only.  Never fsdp the d_model dim: the logits
+            # einsum contracts over d, and a d-dim sharded on the batch axes
+            # forces GSPMD to replicate the (B,S,V) logits over 'data'
+            # (observed: 200 GB/device of collectives on gemma-7b; see
+            # EXPERIMENTS.md §Perf gemma-7b iteration 3).
+            base = (tpx(shape[0]), None)
+        elif name == "unembed":
+            base = (None, tpx(shape[1]))
+        elif parent == "attn" and name in ("wq", "wk", "wv", "cwq", "cwk", "cwv"):
+            base = (fs(sh[0]), tpx(sh[1]), None)          # (D, NH|KV, hd)
+        elif parent == "attn" and name in ("wo", "cwo"):
+            base = (tpx(sh[0]), None, fs(sh[2]))          # (NH, hd, D)
+        elif parent == "mlp" and name == "wi":
+            base = (fs(sh[0]), None, tpx(sh[2]))          # (D, 2, F)
+        elif parent == "mlp" and name == "wo":
+            base = (tpx(sh[0]), fs(sh[1]))                # (F, D)
+        elif parent == "moe" and name == "wi":
+            base = (tpx(sh[0]), fs(sh[1]), None, None)    # (E, D, 2, F)
+        elif parent == "moe" and name == "wo":
+            base = (tpx(sh[0]), None, fs(sh[2]))          # (E, F, D)
+        else:  # norms, router, mamba params: replicated
+            base = (None,) * len(sh)
+        if stacked:
+            base = (None,) + tuple(base)
+        base = tuple(base)[: leaf.ndim]
+        base = base + (None,) * (leaf.ndim - len(base))
+        return P(*base)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_specs(cfg: ModelConfig, batch: Any, mesh: Mesh):
+    _, ndp, _ = axis_sizes(mesh)
+    dp = data_axes(mesh)
+
+    def leaf_spec(leaf):
+        b = leaf.shape[0]
+        first = dp if _div(b, ndp) else None
+        return P(first, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map(leaf_spec, batch)
+
+
+def cache_specs(cfg: ModelConfig, caches: Any, mesh: Mesh):
+    """KV/SSM caches: leading stack dim replicated, batch on data axes,
+    kv-head dim on 'model' when divisible."""
+    _, ndp, tp = axis_sizes(mesh)
+    dp = data_axes(mesh)
+
+    def leaf_spec(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = names[-1]
+        shape = leaf.shape
+        shared = "shared" in names
+        stacked = 1 if (not shared and any(
+            n in ("mamba",) or n.startswith("sub") for n in names[:-1])) or cfg.kind == "encdec" else 0
+        if shared:
+            stacked = 1
+        spec = [None] * leaf.ndim
+        bdim = stacked
+        if bdim < leaf.ndim and _div(shape[bdim], ndp):
+            spec[bdim] = dp
+        if name in ("k", "v") and leaf.ndim - stacked == 4:
+            if _div(shape[stacked + 2], tp):
+                spec[stacked + 2] = "model"
+        if name == "ssm" and _div(shape[stacked + 1], tp):
+            spec[stacked + 1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)
+
+
+def to_shardings(mesh: Mesh, spec_tree: Any):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,160 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Used by ``mamba2-370m`` (pure SSM stack) and ``zamba2-1.2b`` (hybrid).
+
+Training / prefill use the chunked dual form: quadratic attention-like
+compute inside chunks of Q tokens, linear state passing between chunks
+(a `lax.scan` over chunks — sequential but O(L) and TPU-friendly since each
+step is dense einsums).  Decode uses the O(1) recurrent update.
+
+Layout notes: x is headed (B, L, H, P) with P = headdim; B/C are shared
+across heads within ``ssm_groups`` groups (G=1 here), shape (B, L, G, N).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rms_norm
+
+Array = jax.Array
+
+
+def _segsum(a: Array) -> Array:
+    """a (..., Q) -> (..., Q, Q) lower-tri cumulative sums:
+    out[..., i, j] = sum_{k in (j, i]} a[..., k]   (0 on/above diag handled by mask)."""
+    q = a.shape[-1]
+    csum = jnp.cumsum(a, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt_a: Array, b: Array, c: Array, chunk: int):
+    """SSD dual-form forward.
+
+    x    : (B, L, H, P)  pre-scaled by dt (i.e. dt[...,None] * x)
+    dt_a : (B, L, H)     log-decay increments (negative)
+    b, c : (B, L, G, N)  input/output projections (G groups broadcast to H)
+    Returns (y (B, L, H, P), final_state (B, H, N, P)).
+    """
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    rep = h // g
+
+    def rs(t, last):  # (B, L, ...) -> (B, nc, chunk, ...)
+        return t.reshape((bsz, nc, chunk) + last)
+
+    xc = rs(x, (h, p))
+    ac = rs(dt_a, (h,)).astype(jnp.float32)                   # (B,nc,Q,H)
+    bc = jnp.repeat(rs(b, (g, n)), rep, axis=3)               # (B,nc,Q,H,N)
+    cc = jnp.repeat(rs(c, (g, n)), rep, axis=3)
+
+    a_cum = jnp.cumsum(ac, axis=2)                            # (B,nc,Q,H)
+    # ---- intra-chunk (quadratic within chunk) ----
+    lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))         # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", cc, bc)         # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchij,bchij,bcjhp->bcihp",
+                        scores, lmat.astype(scores.dtype), xc.astype(scores.dtype))
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)       # (B,nc,Q,H)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp",
+                        bc, decay_to_end.astype(bc.dtype), xc.astype(bc.dtype))
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                 # (B,nc,H)
+
+    def step(s, inp):
+        st, dec = inp                                         # (B,H,N,P), (B,H)
+        s_out = s
+        s = s * dec[:, :, None, None].astype(s.dtype) + st
+        return s, s_out
+
+    init = jnp.zeros((bsz, h, n, p), states.dtype)
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,nc,H,N,P)
+    decay_from_start = jnp.exp(a_cum)                         # (B,nc,Q,H)
+    y_off = jnp.einsum("bcihn,bcih,bchnp->bcihp",
+                       cc, decay_from_start.astype(cc.dtype), prev_states)
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state.astype(jnp.float32)
+
+
+def _conv1d_causal(x: Array, w: Array, cache: Optional[Array]) -> Tuple[Array, Optional[Array]]:
+    """Depthwise causal conv.  x (B, L, C), w (K, C).  cache (B, K-1, C)."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # (B, L+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_cache = xp[:, -(k - 1):, :] if cache is not None else None
+    return jax.nn.silu(out), new_cache
+
+
+def mamba_block(
+    p: dict, x: Array, cfg: ModelConfig, *, cache: Optional[dict],
+) -> Tuple[Array, Optional[dict]]:
+    """One Mamba-2 block with pre-norm residual.
+
+    cache (decode): {'conv': (B, K-1, d_conv_ch), 'ssm': (B, H, N, P)}.
+    Training/prefill: cache is None (states start at zero).
+    """
+    bsz, l, d = x.shape
+    h_heads, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    g = cfg.ssm_groups
+    din = cfg.d_inner
+
+    hin = rms_norm(x, p["ln"], cfg.norm_eps)
+    xz = jnp.einsum("bld,de->ble", hin, p["wxz"])             # (B,L,2*din)
+    xin, z = xz[..., :din], xz[..., din:]
+    bcd = jnp.einsum("bld,de->ble", hin, p["wbcdt"])          # (B,L,2GN+H)
+    bproj = bcd[..., : g * n]
+    cproj = bcd[..., g * n: 2 * g * n]
+    dt = bcd[..., 2 * g * n:]                                 # (B,L,H)
+
+    conv_in = jnp.concatenate([xin, bproj, cproj], axis=-1)
+    conv_out, new_conv = _conv1d_causal(
+        conv_in, p["conv_w"], None if cache is None else cache["conv"])
+    xin = conv_out[..., :din]
+    bproj = conv_out[..., din: din + g * n].reshape(bsz, l, g, n)
+    cproj = conv_out[..., din + g * n:].reshape(bsz, l, g, n)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # (H,)
+    dt_a = dt * a[None, None, :]                              # (B,L,H)
+    xh = xin.reshape(bsz, l, h_heads, pdim)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+
+    if cache is None or l > 1:
+        # training (cache None) or prefill-into-cache (cache given, l > 1)
+        y, final_state = ssd_chunked(xdt, dt_a, bproj, cproj, min(cfg.ssm_chunk, l))
+        new_ssm = None if cache is None else final_state
+    else:
+        # O(1) recurrence (l == 1): s' = exp(dt*A) s + B dt x; y = C s'
+        rep = h_heads // g
+        b1 = jnp.repeat(bproj[:, 0], rep, axis=1)             # (B,H,N)
+        c1 = jnp.repeat(cproj[:, 0], rep, axis=1)
+        s = cache["ssm"]
+        decay = jnp.exp(dt_a[:, 0])                           # (B,H)
+        upd = jnp.einsum("bhn,bhp->bhnp", b1.astype(jnp.float32),
+                         xdt[:, 0].astype(jnp.float32))
+        s = s * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", c1.astype(jnp.float32), s)
+        y = y[:, None].astype(x.dtype)                        # (B,1,H,P)
+        new_ssm = s
+
+    y = y + xh * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, l, din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    out = x + jnp.einsum("ble,ed->bld", y, p["wout"])
+    new_cache = None if cache is None else {"conv": new_conv, "ssm": new_ssm}
+    return out, new_cache

@@ -1,0 +1,318 @@
+"""Stacks: decoder-only / encoder-decoder / hybrid / pure-SSM.
+
+Layers are *grouped* for `lax.scan`: a group is ``cfg.group_size``
+consecutive layers with (possibly) different static kinds — e.g. llama4
+interleaves [dense, moe], gemma2 alternates [local, global].  Every group
+shares one stacked param tree (leading axis = n_groups), so the HLO contains
+each distinct block body exactly once regardless of depth.
+
+Caches are pytrees stacked the same way and threaded through the scan as
+xs/ys.  The zamba2 hybrid applies a single *weight-shared* attention block
+every ``hybrid_attn_period`` layers outside the scan (Zamba's trick), each
+invocation with its own KV cache slice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import attn_block, cross_kv, mlp_block, moe_block, rms_norm, softcap
+from .ssm import mamba_block
+
+Array = jax.Array
+
+
+def _remat(fn, cfg: ModelConfig):
+    """Apply the configured rematerialization policy."""
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+def _dense(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def init_attn_params(key, cfg: ModelConfig, cross: bool = False, dtype=jnp.float32):
+    d, nh, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 9)
+    p = {
+        "ln": jnp.zeros((d,), dtype),
+        "wq": _dense(ks[0], (d, nh, hd), d, dtype),
+        "wk": _dense(ks[1], (d, kv, hd), d, dtype),
+        "wv": _dense(ks[2], (d, kv, hd), d, dtype),
+        "wo": _dense(ks[3], (nh, hd, d), nh * hd, dtype),
+    }
+    if cross:
+        p.update({
+            "xln": jnp.zeros((d,), dtype),
+            "cwq": _dense(ks[4], (d, nh, hd), d, dtype),
+            "cwk": _dense(ks[5], (d, kv, hd), d, dtype),
+            "cwv": _dense(ks[6], (d, kv, hd), d, dtype),
+            "cwo": _dense(ks[7], (nh, hd, d), nh * hd, dtype),
+        })
+    return p
+
+
+def init_mlp_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "wi": _dense(k1, (d, 2, f), d, dtype),
+        "wo": _dense(k2, (f, d), f, dtype),
+    }
+
+
+def init_moe_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, ep = cfg.d_model, cfg.n_experts_padded
+    fe = cfg.d_ff_expert or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "router": _dense(k1, (d, ep), d, jnp.float32),
+        "wi": _dense(k2, (ep, d, 2, fe), d, dtype),
+        "wo": _dense(k3, (ep, fe, d), fe, dtype),
+    }
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, din = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(jax.random.uniform(ks[3], (h,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "wxz": _dense(ks[0], (d, 2 * din), d, dtype),
+        "wbcdt": _dense(ks[1], (d, 2 * g * n + h), d, dtype),
+        "conv_w": _dense(ks[2], (cfg.ssm_conv, din + 2 * g * n), cfg.ssm_conv, dtype),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse softplus
+        "a_log": jnp.log(jax.random.uniform(ks[4], (h,), jnp.float32, 1.0, 16.0)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.zeros((din,), dtype),
+        "wout": _dense(ks[5], (din, d), din, dtype),
+    }
+
+
+def init_sub_params(key, cfg: ModelConfig, kind: str, cross: bool = False, dtype=jnp.float32):
+    if kind == "mamba":
+        return {"mamba": init_mamba_params(key, cfg, dtype)}
+    k1, k2 = jax.random.split(key)
+    p = {"attn": init_attn_params(k1, cfg, cross=cross, dtype=dtype)}
+    if kind == "moe":
+        p["moe"] = init_moe_params(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp_params(k2, cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """Full parameter tree.  Leaves of 'blocks' are stacked (n_groups, ...)."""
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    kinds = cfg.sub_block_kinds()
+    params: Dict[str, Any] = {
+        "embed": _dense(keys[0], (cfg.vocab_padded, cfg.d_model), cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense(keys[1], (cfg.d_model, cfg.vocab_padded),
+                                   cfg.d_model, dtype)
+
+    def stack_init(k):
+        def one(kk):
+            sks = jax.random.split(kk, len(kinds))
+            return {f"sub{j}": init_sub_params(sks[j], cfg, kinds[j], dtype=dtype)
+                    for j in range(len(kinds))}
+        return jax.vmap(one)(jax.random.split(k, cfg.n_groups))
+
+    if cfg.kind == "encdec":
+        enc_keys = jax.random.split(keys[2], cfg.n_enc_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda kk: init_sub_params(kk, cfg, "attn", dtype=dtype))(enc_keys)
+        dec_keys = jax.random.split(keys[3], cfg.n_layers)
+        params["dec_blocks"] = jax.vmap(
+            lambda kk: init_sub_params(kk, cfg, "attn", cross=True, dtype=dtype))(dec_keys)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    elif cfg.kind == "hybrid":
+        mam_keys = jax.random.split(keys[2], cfg.n_layers)
+        params["blocks"] = jax.vmap(
+            lambda kk: init_sub_params(kk, cfg, "mamba", dtype=dtype))(mam_keys)
+        params["shared_attn"] = init_sub_params(keys[3], cfg, "attn", dtype=dtype)
+    else:
+        params["blocks"] = stack_init(keys[2])
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def _apply_sub(kind: str, p: dict, x: Array, cfg: ModelConfig, *,
+               positions, cache, cache_pos0, causal=True, xkv=None, xvalid=None):
+    """Returns (x, new_cache, aux_loss)."""
+    if kind == "mamba":
+        x, nc = mamba_block(p["mamba"], x, cfg, cache=cache)
+        return x, nc, 0.0
+    window = cfg.sliding_window if kind == "attn_local" else 0
+    x, nc = attn_block(p["attn"], x, cfg, positions=positions, cache=cache,
+                       cache_pos0=cache_pos0, window=window, causal=causal,
+                       xattn_kv=xkv, xattn_valid=xvalid)
+    if kind == "moe":
+        x, aux = moe_block(p["moe"], x, cfg)
+        return x, nc, aux
+    return mlp_block(p["mlp"], x, cfg), nc, 0.0
+
+
+def decoder_stack(params, cfg: ModelConfig, x: Array, *, positions,
+                  caches=None, cache_pos0=None):
+    """Scan over layer groups.  caches: pytree stacked (n_groups, ...) or None.
+    Returns (x, new_caches, aux)."""
+    kinds = cfg.sub_block_kinds()
+
+    def group_fn(carry, inp):
+        xg, aux = carry
+        gp, gcache = inp
+        new_cache = {}
+        for j, kind in enumerate(kinds):
+            sub_cache = None if gcache is None else gcache.get(f"sub{j}")
+            xg, nc, a = _apply_sub(kind, gp[f"sub{j}"], xg, cfg,
+                                   positions=positions, cache=sub_cache,
+                                   cache_pos0=cache_pos0)
+            if nc is not None:
+                new_cache[f"sub{j}"] = nc
+            aux = aux + a
+        return (xg, aux), (new_cache if new_cache else None)
+
+    fn = _remat(group_fn, cfg)
+    (x, aux), new_caches = jax.lax.scan(
+        fn, (x, jnp.float32(0.0)), (params["blocks"], caches),
+        unroll=cfg.n_groups if cfg.scan_unroll else 1)
+    return x, new_caches, aux
+
+
+def hybrid_stack(params, cfg: ModelConfig, x: Array, *, positions,
+                 caches=None, cache_pos0=None):
+    """Zamba2: mamba backbone + weight-shared attention block every k layers.
+
+    caches = {'mamba': stacked (n_layers, ...) or None,
+              'shared': {'k': (n_shared, B, S, KV, hd), 'v': ...} or None}
+    """
+    period = cfg.hybrid_attn_period
+    bounds = list(range(0, cfg.n_layers, period))
+    new_shared_k, new_shared_v = [], []
+    aux = jnp.float32(0.0)
+
+    def seg_scan(x, seg_params, seg_caches):
+        def body(carry, inp):
+            xg, = carry
+            gp, gc = inp
+            xg, nc, _ = _apply_sub("mamba", gp, xg, cfg, positions=positions,
+                                   cache=gc, cache_pos0=cache_pos0)
+            return (xg,), nc
+        fn = _remat(body, cfg)
+        (x,), ncs = jax.lax.scan(fn, (x,), (seg_params, seg_caches),
+                                 unroll=seg_params["mamba"]["ln"].shape[0]
+                                 if cfg.scan_unroll else 1)
+        return x, ncs
+
+    new_mamba = []
+    for si, start in enumerate(bounds):
+        # shared attention block (weights shared; per-invocation KV cache)
+        sc = None
+        if caches is not None and caches.get("shared") is not None:
+            sc = {"k": caches["shared"]["k"][si], "v": caches["shared"]["v"][si]}
+        x, nc, _ = _apply_sub("attn", params["shared_attn"], x, cfg,
+                              positions=positions, cache=sc, cache_pos0=cache_pos0)
+        if nc is not None:
+            new_shared_k.append(nc["k"])
+            new_shared_v.append(nc["v"])
+        end = min(start + period, cfg.n_layers)
+        seg_p = jax.tree.map(lambda a: a[start:end], params["blocks"])
+        seg_c = None
+        if caches is not None and caches.get("mamba") is not None:
+            seg_c = jax.tree.map(lambda a: a[start:end], caches["mamba"])
+        x, ncs = seg_scan(x, seg_p, seg_c)
+        if ncs is not None:
+            new_mamba.append(ncs)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_mamba)
+            if new_mamba else None,
+            "shared": {"k": jnp.stack(new_shared_k), "v": jnp.stack(new_shared_v)}
+            if new_shared_k else None,
+        }
+    return x, new_caches, aux
+
+
+def encoder_stack(params, cfg: ModelConfig, x: Array):
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+
+    def body(carry, gp):
+        xg, = carry
+        xg, _, _ = _apply_sub("attn", gp, xg, cfg, positions=positions,
+                              cache=None, cache_pos0=None, causal=False)
+        return (xg,), None
+
+    fn = _remat(body, cfg)
+    (x,), _ = jax.lax.scan(fn, (x,), params["enc_blocks"],
+                           unroll=cfg.n_enc_layers if cfg.scan_unroll else 1)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_decoder_stack(params, cfg: ModelConfig, x: Array, *, positions,
+                         enc_kv, enc_valid, caches=None, cache_pos0=None):
+    """Decoder with cross-attention.  enc_kv: stacked per-layer (ck, cv)."""
+    def body(carry, inp):
+        xg, = carry
+        gp, gc, ekv = inp
+        xg, nc, _ = _apply_sub("attn", gp, xg, cfg, positions=positions,
+                               cache=gc, cache_pos0=cache_pos0,
+                               xkv=(ekv["ck"], ekv["cv"]), xvalid=enc_valid)
+        return (xg,), nc
+
+    fn = _remat(body, cfg)
+    (x,), new_caches = jax.lax.scan(
+        fn, (x,), (params["dec_blocks"], caches, enc_kv),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return x, new_caches, jnp.float32(0.0)
+
+
+def encode_cross_kv(params, cfg: ModelConfig, enc_out: Array):
+    """Precompute stacked per-decoder-layer cross K/V from encoder output."""
+    def per_layer(gp):
+        ck, cv = cross_kv(gp["attn"], enc_out)
+        return {"ck": ck, "cv": cv}
+    return jax.vmap(per_layer, in_axes=0)(params["dec_blocks"])
+
+
+def logits_from_hidden(params, cfg: ModelConfig, x: Array) -> Array:
+    """Logits in cfg.loss_dtype (bf16 default for bf16 models): the (B,S,V)
+    tensor is the largest activation in every LM cell; fp32 here doubles the
+    memory roofline term (EXPERIMENTS.md §Perf gemma-7b iteration 4).  Loss
+    reductions still accumulate in f32."""
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    out_dtype = jnp.dtype(cfg.resolved_loss_dtype)
+    logits = softcap(logits.astype(out_dtype), cfg.final_softcap)
+    # mask padded vocab entries
+    pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+    return jnp.where(pad[None, None, :], jnp.asarray(-1e9, out_dtype), logits)

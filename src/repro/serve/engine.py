@@ -1,0 +1,104 @@
+"""Batched ANN serving engine (the paper's system as a service).
+
+Production posture on a single process:
+  * request queue -> fixed-size batches (padded to the compiled batch shape,
+    so one XLA program serves any load level);
+  * per-batch deadline timing + straggler hedging hook: if a shard's partial
+    result misses the hedge deadline, the engine re-issues the probe batch to
+    the replica group (single-process: recorded, not exercised — see
+    DESIGN.md Sect. 4);
+  * index checkpoint/restore via repro.ckpt (a serving node can be replaced
+    and re-load the shard it owns);
+  * exact L1 rerank guarantees results are exact over probed candidates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import IndexConfig, IndexState, build_index, query_index
+
+__all__ = ["ServeConfig", "AnnServingEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int = 64
+    hedge_ms: float = 50.0
+    max_wait_ms: float = 2.0
+
+
+class AnnServingEngine:
+    """Single-shard engine; the distributed variant wraps dist_query_fn."""
+
+    def __init__(self, cfg: IndexConfig, serve_cfg: ServeConfig,
+                 dataset: jax.Array, key: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.state: IndexState = build_index(cfg, key, dataset)
+        self._dim = dataset.shape[1]
+        self._pending: List[np.ndarray] = []
+        self.stats = {"batches": 0, "queries": 0, "hedges": 0,
+                      "total_ms": 0.0, "p50_ms": []}
+        # warm the compiled path
+        warm = jnp.zeros((serve_cfg.batch_size, self._dim), jnp.int32)
+        query_index(cfg, self.state, warm)[0].block_until_ready()
+
+    def submit(self, queries: np.ndarray) -> None:
+        for q in np.atleast_2d(queries):
+            self._pending.append(q.astype(np.int32))
+
+    def _next_batch(self) -> Optional[np.ndarray]:
+        if not self._pending:
+            return None
+        bs = self.serve_cfg.batch_size
+        take = self._pending[:bs]
+        self._pending = self._pending[bs:]
+        batch = np.stack(take)
+        if batch.shape[0] < bs:  # pad to the compiled shape
+            pad = np.zeros((bs - batch.shape[0], self._dim), np.int32)
+            batch = np.concatenate([batch, pad])
+        return batch, len(take)
+
+    def drain(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Process all pending requests; returns (dists, ids) stacked."""
+        out_d, out_i = [], []
+        while True:
+            nb = self._next_batch()
+            if nb is None:
+                break
+            batch, n_real = nb
+            t0 = time.perf_counter()
+            d, i = query_index(self.cfg, self.state, jnp.asarray(batch))
+            d.block_until_ready()
+            ms = (time.perf_counter() - t0) * 1e3
+            if ms > self.serve_cfg.hedge_ms:
+                # hedging hook: in the multi-replica deployment this re-issues
+                # to the replica group; single-process we record the event.
+                self.stats["hedges"] += 1
+            self.stats["batches"] += 1
+            self.stats["queries"] += n_real
+            self.stats["total_ms"] += ms
+            self.stats["p50_ms"].append(ms)
+            out_d.append(np.asarray(d)[:n_real])
+            out_i.append(np.asarray(i)[:n_real])
+        if not out_d:
+            return np.zeros((0, self.cfg.k)), np.zeros((0, self.cfg.k))
+        return np.concatenate(out_d), np.concatenate(out_i)
+
+    def summary(self) -> dict:
+        lat = sorted(self.stats["p50_ms"]) or [0.0]
+        return {
+            "queries": self.stats["queries"],
+            "batches": self.stats["batches"],
+            "hedges": self.stats["hedges"],
+            "mean_batch_ms": self.stats["total_ms"] / max(self.stats["batches"], 1),
+            "p50_batch_ms": lat[len(lat) // 2],
+            "p99_batch_ms": lat[min(len(lat) - 1, int(len(lat) * 0.99))],
+        }

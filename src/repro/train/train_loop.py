@@ -1,0 +1,56 @@
+"""train_step builder: grads (optionally microbatched via lax.scan for
+compute/collective overlap) -> clip -> AdamW.  Used by the launcher, the
+dry-run (lowering only) and the end-to-end training example.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from .optimizer import OptConfig, adamw_update
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    num_microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With num_microbatches > 1 the global batch is split along dim 0 and
+    gradients are accumulated in a lax.scan — XLA overlaps each microbatch's
+    backward collectives with the next microbatch's compute.
+    """
+
+    def loss_fn(params, batch):
+        return model_lib.train_loss(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches <= 1:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % num_microbatches == 0, (b, num_microbatches)
+                return x.reshape((num_microbatches, b // num_microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, mbatch):
+                g_acc, loss_acc = carry
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, loss_acc + m["loss"]), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(acc, (zeros, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            metrics = {"loss": loss_sum / num_microbatches,
+                       "aux": jnp.float32(0.0), "tokens": jnp.float32(0.0)}
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step

@@ -1,0 +1,101 @@
+"""Core RW-LSH math vs the paper's own claims (Sect. 3.1, 8.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashes as hl
+from repro.core import probability as pr
+from repro.core import walks as wl
+
+
+def test_walk_eval_forms_agree():
+    wt = wl.make_walks(jax.random.PRNGKey(0), 6, 8, 32)
+    pts = (jax.random.randint(jax.random.PRNGKey(1), (16, 8), 0, 17) * 2).astype(jnp.int32)
+    a = wl.eval_prefix(wt, pts)
+    b = wl.eval_pairs_thermo(wt, pts)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prefix_bounds():
+    wt = wl.make_walks(jax.random.PRNGKey(2), 4, 4, 64)
+    pref = np.asarray(wt.prefix)
+    # tau(0) = 0; |tau(2t)| <= 2t
+    assert (pref[..., 0] == 0).all()
+    t = np.arange(pref.shape[-1])
+    assert (np.abs(pref) <= 2 * t).all()
+
+
+def test_rw_difference_law():
+    """f(s) - f(t) ~ Y_{d1} exactly (paper Sect. 3.1), via chi-square."""
+    p = hl.make_rw_params(jax.random.PRNGKey(3), 1, 4000, 4, 64, 8)
+    s = jnp.array([[10, 4, 6, 0]], jnp.int32)
+    t = jnp.array([[8, 4, 2, 2]], jnp.int32)
+    d1 = int(jnp.abs(s - t).sum())
+    diff = np.asarray(hl.raw_hash(p, s) - hl.raw_hash(p, t)).ravel()
+    support, pmf = pr.rw_pmf(d1)
+    counts = np.array([(diff == l).sum() for l in support])
+    assert counts.sum() == diff.size  # support is exactly {-d..d even}
+    expected = pmf * diff.size
+    mask = expected > 5
+    chi2 = float(np.sum((counts[mask] - expected[mask]) ** 2 / expected[mask]))
+    # dof ~ mask.sum()-1; generous 99.9% bound
+    assert chi2 < 3.0 * mask.sum() + 20
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(0, 60).map(lambda x: 2 * x), w=st.integers(1, 30).map(lambda x: 2 * x))
+def test_collision_prob_monotone(d, w):
+    """p(d) > p(d+2) for even W (paper Sect. 8.1)."""
+    assert pr.collision_prob_rw(d, w) > pr.collision_prob_rw(d + 2, w)
+
+
+def test_collision_prob_closed_form():
+    # p(0) = 1 - E|uniform triangle|... at d=0: Y=0 always -> p = 1 - 0/W = 1
+    assert pr.collision_prob_rw(0, 8) == pytest.approx(1.0)
+    # d=2: Y in {-2,0,2} w.p. {1/4,1/2,1/4}: p = 1/2 + 2*(1/4)*(1-2/W)
+    w = 8
+    assert pr.collision_prob_rw(2, w) == pytest.approx(0.5 + 0.5 * (1 - 2 / w))
+
+
+def test_rw_cdf_interval():
+    d = 6
+    # full mass
+    assert pr.rw_interval_prob(d, -7, 7) == pytest.approx(1.0)
+    # half-open: [0, 2) contains only l=0
+    s, pmf = pr.rw_pmf(d)
+    assert pr.rw_interval_prob(d, 0, 2) == pytest.approx(pmf[s.tolist().index(0)])
+
+
+def test_expected_zj_sq_vs_mc(rng):
+    """E[z_j^2] closed form (paper Sect. 2.2) vs Monte Carlo."""
+    m, w, runs = 10, 8.0, 40000
+    a = rng.uniform(0, w, size=(runs, m))
+    x_all = np.sort(np.concatenate([a, w - a], axis=1), axis=1)
+    mc = (x_all ** 2).mean(axis=0)
+    closed = pr.expected_zj_sq(m, w)
+    np.testing.assert_allclose(mc, closed, rtol=0.05)
+
+
+def test_rho_quality_ordering():
+    # RW-LSH quality at (r1, r2) = (6, 12), W=8 (paper Sect. 4 setup)
+    p1 = pr.collision_prob_rw(6, 8)
+    p2 = pr.collision_prob_rw(12, 8)
+    rho_rw = pr.rho(p1, p2)
+    assert 0 < rho_rw < 1
+    # CP-LSH at W=20 is slightly better (paper: "quality slightly worse")
+    c1 = pr.collision_prob_cauchy(6, 20)
+    c2 = pr.collision_prob_cauchy(12, 20)
+    rho_cp = pr.rho(c1, c2)
+    assert rho_cp < rho_rw
+
+
+def test_mix_keys_deterministic_and_sensitive():
+    p = hl.make_rw_params(jax.random.PRNGKey(0), 2, 4, 4, 16, 8)
+    b = jnp.array([[[1, 2, 3, 4], [5, 6, 7, 8]]], jnp.int32)  # (1, L=2, M=4)
+    k1 = hl.mix_keys(p, b)
+    k2 = hl.mix_keys(p, b)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    b2 = b.at[0, 0, 0].add(1)
+    assert np.asarray(hl.mix_keys(p, b2))[0, 0] != np.asarray(k1)[0, 0]

@@ -1,0 +1,85 @@
+"""MoE block invariants: dispatch/combine correctness, capacity dropping,
+padding-expert masking, equivalence with a dense MLP at E=1."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_moe_params
+
+
+def _cfg(**kw):
+    base = dict(name="t", n_layers=1, d_model=16, n_heads=2, n_kv=2,
+                head_dim=8, d_ff=32, vocab=64, n_experts=4, top_k=1,
+                d_ff_expert=32, moe_group=64, capacity_factor=2.0,
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_moe_output_finite_and_residual():
+    cfg = _cfg()
+    p = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, 16)).astype(np.float32))
+    y, aux = layers.moe_block(p, x, cfg)
+    assert y.shape == x.shape
+    assert jnp.isfinite(y).all()
+    assert float(aux) > 0.0
+    # zero expert weights => residual passthrough
+    p0 = dict(p, wo=jnp.zeros_like(p["wo"]))
+    y0, _ = layers.moe_block(p0, x, cfg)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(x), atol=1e-6)
+
+
+def test_moe_padding_experts_never_selected():
+    cfg = _cfg(n_experts=3)           # padded to 16
+    assert cfg.n_experts_padded == 16
+    p = init_moe_params(jax.random.PRNGKey(1), cfg)
+    # Force the router to adore a padding expert; the mask must veto it.
+    router = np.zeros(p["router"].shape, np.float32)
+    router[:, 5] = 100.0              # expert 5 is padding (>= 3)
+    p = dict(p, router=jnp.asarray(router))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(1, 8, 16)).astype(np.float32))
+    y, _ = layers.moe_block(p, x, cfg)
+    assert jnp.isfinite(y).all()
+
+
+def test_moe_single_expert_equals_dense():
+    """E=1, top-1, huge capacity == an MLP with that expert's weights."""
+    cfg = _cfg(n_experts=1, capacity_factor=100.0, moe_group=1024)
+    p = init_moe_params(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(2, 16, 16)).astype(np.float32))
+    y, _ = layers.moe_block(p, x, cfg)
+    mlp_p = {"ln": p["ln"], "wi": p["wi"][0], "wo": p["wo"][0]}
+    y_dense = layers.mlp_block(mlp_p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_dense),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity 4 and all tokens routed to one expert, most are dropped
+    (output ~ residual for dropped tokens)."""
+    cfg = _cfg(n_experts=4, capacity_factor=0.25, top_k=1, moe_group=64)
+    p = init_moe_params(jax.random.PRNGKey(3), cfg)
+    router = np.zeros(p["router"].shape, np.float32)
+    router[:, 0] = 10.0
+    p = dict(p, router=jnp.asarray(router))
+    # strictly positive features => every token's top-1 is expert 0
+    x = jnp.asarray(np.abs(np.random.default_rng(3).normal(
+        size=(1, 64, 16))).astype(np.float32) + 0.1)
+    y, _ = layers.moe_block(p, x, cfg)
+    cap = layers.moe_capacity(cfg, 64)
+    changed = (jnp.abs(y - x).sum(-1) > 1e-6).sum()
+    assert int(changed) <= cap  # only <= capacity tokens got expert output
+
+
+def test_moe_topk_weights_normalized():
+    cfg = _cfg(top_k=2, n_experts=8)
+    p = init_moe_params(jax.random.PRNGKey(4), cfg)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(1, 8, 16)).astype(np.float32))
+    y, aux = layers.moe_block(p, x, cfg)
+    assert jnp.isfinite(y).all() and jnp.isfinite(aux)

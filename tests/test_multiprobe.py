@@ -1,0 +1,96 @@
+"""Multi-probe machinery vs the paper's worked examples (Sect. 2.2, 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import multiprobe as mp
+from repro.core.probability import expected_zj_sq
+
+
+def test_template_matches_paper_m2_example():
+    """Paper Sect. 2.2: template for M=2 is
+    [z1, z2, z1+z2, z3, z1+z3, z4, z2+z4, z3+z4]."""
+    sets = mp.build_template(2, 10.0, 8)
+    assert sets == [(1,), (2,), (1, 2), (3,), (1, 3), (4,), (2, 4), (3, 4)]
+
+
+def test_fig1_instantiation():
+    """Paper Fig. 1 toy example probing sequence."""
+    sets = mp.build_template(2, 10.0, 8)
+    x_all = np.array([1.47, 5.38, 8.53, 4.62])
+    deltas = mp.perturbations_from_sets(sets, x_all)
+    expect = [(-1, 0), (0, 1), (-1, 1), (0, -1), (-1, -1), (1, 0), (1, 1), (1, -1)]
+    assert [tuple(d) for d in deltas.tolist()] == expect
+
+
+def test_heap_sequence_validity_and_order():
+    z = expected_zj_sq(5, 8.0)
+    sets = mp.heap_sequence(z, 50)
+    scores = [sum(z[j - 1] for j in a) for a in sets]
+    assert scores == sorted(scores)
+    for a in sets:
+        assert len(set(a)) == len(a)
+        assert all((11 - j) not in a for j in a)  # no both-faces
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(2, 8), seed=st.integers(0, 100))
+def test_device_instantiation_matches_host(m, seed):
+    rng = np.random.default_rng(seed)
+    w = 8.0
+    t = 20
+    sets = mp.build_template(m, w, t)
+    tmpl = jnp.asarray(mp.template_matrix(sets, m))
+    a = rng.uniform(0, w, size=(3, 2, m)).astype(np.float32)  # batch (3,2)
+    dev = np.asarray(mp.instantiate_template(tmpl, jnp.asarray(a), w))
+    for i in range(3):
+        for l in range(2):
+            x_all = np.concatenate([a[i, l], w - a[i, l]])
+            host = mp.perturbations_from_sets(sets, x_all)
+            np.testing.assert_array_equal(dev[i, l], host)
+
+
+def test_template_near_optimal_success():
+    """Template sequence loses only a little vs the exact-optimal sequence
+    (paper Table 2 vs Table 1: 5-10%)."""
+    rng = np.random.default_rng(1)
+    m, w, d, t = 10, 8.0, 8.0, 100
+    sets = mp.build_template(m, w, t)
+    loss = []
+    for _ in range(50):
+        a = rng.uniform(0, w, m)
+        opt = mp.exact_topk_success(a, w, "rw", d, [t])[0]
+        x_all = np.concatenate([a, w - a])
+        deltas = mp.perturbations_from_sets(sets, x_all)
+        tmp = mp.sequence_success(deltas, a, w, "rw", d, [t])[0]
+        assert tmp <= opt + 1e-12
+        loss.append(1 - tmp / opt)
+    assert np.mean(loss) < 0.2
+
+
+def test_paper_table1_values():
+    """Spot-check paper Table 1 at reduced run count (loose tolerance)."""
+    rw = mp.success_table_mc("rw", 10, 8.0, [8], [30, 60, 100], runs=150, seed=7)
+    np.testing.assert_allclose(rw[0], [0.36, 0.48, 0.57], atol=0.05)
+    cp = mp.success_table_mc("cauchy", 10, 20.0, [8], [100], runs=150, seed=7)
+    assert cp[0, 0] < 0.05  # "top-light" (paper: 0.0268)
+
+
+def test_paper_table2_values():
+    t2 = mp.success_table_mc("rw", 10, 8.0, [8], [100], runs=150, seed=7,
+                             use_template=True)
+    np.testing.assert_allclose(t2[0], [0.52], atol=0.05)
+
+
+def test_coord_landing_probs_sum_to_at_most_one():
+    rng = np.random.default_rng(3)
+    a = rng.uniform(0, 8, 10)
+    p = mp.coord_landing_probs(a, 8.0, "rw", 12)
+    assert p.shape == (10, 3)
+    assert (p.sum(axis=1) <= 1.0 + 1e-12).all()
+    # gaussian and cauchy variants too
+    for fam, d in (("gaussian", 5.0), ("cauchy", 12.0)):
+        p = mp.coord_landing_probs(a, 8.0, fam, d)
+        assert (p >= 0).all() and (p.sum(axis=1) <= 1 + 1e-12).all()

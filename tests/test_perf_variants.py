@@ -1,0 +1,73 @@
+"""Correctness of §Perf optimizations: every perf variant must match its
+paper-faithful baseline numerically."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import baselines as bl
+from repro.core.index import IndexConfig, build_index, query_index
+from repro.data import ann_synthetic as ds
+from repro.models import layers
+from repro.models import model as M
+
+
+def test_chunked_attention_matches_reference():
+    rng = np.random.default_rng(1)
+    b, s, nh, kv, hd = 2, 48, 6, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, nh, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    for window, cap, chunk in ((0, 0.0, 8), (16, 0.0, 12), (0, 50.0, 16),
+                               (12, 30.0, 8)):
+        ref = layers.attention(q, k, v, q_pos=pos, kv_pos=pos, kv_valid=None,
+                               causal=True, window=window, cap=cap)
+        got = layers.attention_chunked(q, k, v, q_pos=pos, window=window,
+                                       cap=cap, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=3e-5, rtol=1e-4)
+
+
+def test_train_loss_invariant_to_attn_chunk():
+    cfg = get_reduced("smollm_360m")
+    cfg_c = dataclasses.replace(cfg, attn_chunk=8)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab, (2, 32)).astype(np.int32)),
+             "labels": jnp.asarray(rng.integers(1, cfg.vocab, (2, 32)).astype(np.int32))}
+    l0, _ = M.train_loss(params, cfg, batch)
+    l1, _ = M.train_loss(params, cfg_c, batch)
+    assert abs(float(l0) - float(l1)) < 1e-3
+
+
+def test_train_loss_bf16_logits_close_to_f32():
+    cfg = get_reduced("smollm_360m")
+    cfg16 = dataclasses.replace(cfg, loss_dtype="bfloat16")
+    cfg32 = dataclasses.replace(cfg, loss_dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab, (2, 32)).astype(np.int32)),
+             "labels": jnp.asarray(rng.integers(1, cfg.vocab, (2, 32)).astype(np.int32))}
+    l16, _ = M.train_loss(params, cfg16, batch)
+    l32, _ = M.train_loss(params, cfg32, batch)
+    assert abs(float(l16) - float(l32)) / float(l32) < 5e-3
+
+
+def test_int16_dataset_identical_results():
+    spec = ds.DatasetSpec("p", n=4000, dim=24, universe=128, num_clusters=8)
+    data = jnp.asarray(ds.make_dataset(spec))
+    queries = jnp.asarray(ds.make_queries(spec, np.asarray(data), 16))
+    base = IndexConfig(num_tables=4, num_hashes=8, width=40, num_probes=50,
+                       candidate_cap=32, universe=128, k=8)
+    opt = dataclasses.replace(base, dataset_dtype="int16")
+    s0 = build_index(base, jax.random.PRNGKey(0), data)
+    s1 = build_index(opt, jax.random.PRNGKey(0), data)
+    assert s1.dataset.dtype == jnp.int16
+    d0, i0 = query_index(base, s0, queries)
+    d1, i1 = query_index(opt, s1, queries)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))

@@ -1,0 +1,60 @@
+"""Roofline tooling: HLO collective parser, hardware terms, MODEL_FLOPS."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import roofline as rl
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[16,1024,512]{2,1,0} all-gather(%x), replica_groups=[16,16]<=[256]
+  %ar = f32[256,128]{1,0} all-reduce(%y), to_apply=%add
+  %rs = f32[2,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = s32[8,4]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %a2a = (f32[4,8]{1,0}, f32[4,8]{1,0}) all-to-all(%p, %q), dimensions={0}
+  %dot = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = rl.collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 16 * 1024 * 512 * 2
+    assert out["all-reduce"] == 256 * 128 * 4
+    assert out["reduce-scatter"] == 2 * 64 * 4
+    assert out["collective-permute"] == 8 * 4 * 4
+    assert out["all-to-all"] == 2 * 4 * 8 * 4
+    # dot is not a collective
+    assert sum(out.values()) == (16 * 1024 * 512 * 2 + 256 * 128 * 4 +
+                                 2 * 64 * 4 + 8 * 4 * 4 + 2 * 4 * 8 * 4)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = rl.Roofline(flops=197e12, bytes_accessed=819e9 * 2,
+                    coll_bytes=50e9 * 0.5, coll_breakdown={},
+                    peak_bytes_device=1e9)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+
+
+def test_model_flops_moe_counts_active_only():
+    dense = get_config("gemma_2b")
+    moe = get_config("llama4_maverick_400b_a17b")
+    tokens = 1000
+    f_dense = rl.model_flops(dense, tokens, "train")
+    assert f_dense == pytest.approx(6.0 * dense.param_count() * tokens)
+    f_moe = rl.model_flops(moe, tokens, "train")
+    assert f_moe < 6.0 * moe.param_count() * tokens * 0.2  # 400B total, 17B-ish active
+    # active params implied by MODEL_FLOPS should be ~17B +/- generous margin
+    active = f_moe / (6.0 * tokens)
+    assert 8e9 < active < 30e9
+
+
+def test_dtype_bytes_table():
+    assert rl._shape_bytes("bf16", "2,3") == 12
+    assert rl._shape_bytes("f32", "10") == 40
+    assert rl._shape_bytes("pred", "8") == 8
+    assert rl._shape_bytes("s8", "") == 1  # scalar

@@ -1,0 +1,99 @@
+"""Sharding rules: divisibility handling, the contracted-dim fsdp rule, and
+cache/batch spec structure.  Uses abstract params (no device allocation) and
+a locally constructed 16x16-shaped Mesh over 1 device? No — specs are pure
+functions of mesh *shape metadata*, so we build a lightweight fake mesh."""
+import dataclasses
+from functools import partial
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import sharding as shd
+from repro.models import transformer as tf
+
+
+class FakeMesh:
+    """Duck-typed mesh carrying only what sharding.py reads."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, object)
+        self.shape = dict(zip(names, shape))
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _specs(arch, mesh=MESH):
+    cfg = get_config(arch)
+    params = jax.eval_shape(partial(tf.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    return cfg, params, shd.param_specs(cfg, params, mesh)
+
+
+def _flat(params, specs):
+    fp = jax.tree_util.tree_flatten_with_path(params)[0]
+    fs = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    keys = ["/".join(str(getattr(p, "key", p)) for p in path) for path, _ in fp]
+    return dict(zip(keys, zip([l for _, l in fp], fs)))
+
+
+def test_every_sharded_dim_is_divisible():
+    for arch in ("gemma_7b", "llama4_maverick_400b_a17b", "smollm_360m",
+                 "granite_moe_3b_a800m", "mamba2_370m"):
+        cfg, params, specs = _specs(arch)
+        flat = _flat(params, specs)
+        for key, (leaf, spec) in flat.items():
+            for dim, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = 1
+                for a in axes:
+                    size *= MESH.shape[a]
+                assert leaf.shape[dim] % size == 0, (arch, key, leaf.shape, spec)
+
+
+def test_embed_never_fsdp_on_dmodel():
+    """Regression for EXPERIMENTS.md §Perf gemma-7b iteration 3."""
+    for arch in ("gemma_7b", "gemma2_27b", "llama4_maverick_400b_a17b"):
+        cfg, params, specs = _specs(arch)
+        flat = _flat(params, specs)
+        emb_spec = flat["embed"][1]
+        assert emb_spec[0] in ("model", None)
+        assert emb_spec[1] is None, (arch, emb_spec)
+
+
+def test_nondivisible_heads_replicated():
+    cfg, params, specs = _specs("smollm_360m")  # 15 heads, kv 5: not /16
+    flat = _flat(params, specs)
+    for key, (leaf, spec) in flat.items():
+        if key.endswith("wq") or key.endswith("wk"):
+            assert spec[2] is None  # head dim replicated, no padding lies
+
+
+def test_moe_experts_sharded_on_model():
+    cfg, params, specs = _specs("llama4_maverick_400b_a17b")
+    flat = _flat(params, specs)
+    moe_wi = [v for k, v in flat.items() if "moe" in k and k.endswith("wi")]
+    assert moe_wi and all(s[1] == "model" for _, s in moe_wi)  # stacked dim 0
+
+
+def test_batch_specs_replicate_when_indivisible():
+    cfg = get_config("mamba2_370m")
+    big = {"tokens": jax.ShapeDtypeStruct((256, 128), np.int32)}
+    one = {"tokens": jax.ShapeDtypeStruct((1, 128), np.int32)}
+    sb = shd.batch_specs(cfg, big, MESH3)
+    so = shd.batch_specs(cfg, one, MESH3)
+    assert sb["tokens"][0] == ("pod", "data")
+    assert so["tokens"][0] is None  # long_500k batch=1
+
+
+def test_axis_sizes():
+    sizes, ndp, tp = shd.axis_sizes(MESH3)
+    assert ndp == 32 and tp == 16
+    sizes, ndp, tp = shd.axis_sizes(MESH)
+    assert ndp == 16 and tp == 16
