@@ -9,7 +9,8 @@ import sys
 import traceback
 
 from . import (ablation_width, fig2_tables_vs_recall, kernel_bench,
-               table1_success_prob, table2_template, table4_ann_quality)
+               segmented_bench, table1_success_prob, table2_template,
+               table4_ann_quality)
 
 MODULES = [
     ("table1_success_prob", table1_success_prob),
@@ -18,6 +19,7 @@ MODULES = [
     ("fig2_tables_vs_recall", fig2_tables_vs_recall),
     ("kernel_bench", kernel_bench),
     ("ablation_width", ablation_width),
+    ("segmented_bench", segmented_bench),
 ]
 
 

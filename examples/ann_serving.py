@@ -1,17 +1,16 @@
 """End-to-end driver (the paper's kind of system): serve batched ANN requests
-against an MP-RW-LSH index, with checkpoint + restart of the serving node.
+against a mutable segmented MP-RW-LSH index — live inserts/deletes with
+watermark-triggered compaction — plus checkpoint + restart of the node.
 
   PYTHONPATH=src python examples/ann_serving.py
 """
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import CheckpointManager
 from repro.core.baselines import brute_force_l1, recall
-from repro.core.index import IndexConfig, query_index
+from repro.core.index import IndexConfig
+from repro.core.segments import SegmentedIndex
 from repro.data import ann_synthetic as ds
 from repro.serve.engine import AnnServingEngine, ServeConfig
 
@@ -22,16 +21,15 @@ def main():
     data = ds.make_dataset(spec)
     cfg = IndexConfig(num_tables=8, num_hashes=12, width=56, num_probes=200,
                       candidate_cap=128, universe=spec.universe, k=10)
-    engine = AnnServingEngine(cfg, ServeConfig(batch_size=64),
-                              jnp.asarray(data))
+    engine = AnnServingEngine(
+        cfg, ServeConfig(batch_size=64, delta_cap=512, compact_watermark=0.6),
+        jnp.asarray(data))
 
     # simulate request traffic in uneven bursts
-    total = 0
     rng = np.random.default_rng(1)
     for burst in (30, 64, 100, 17):
         engine.submit(ds.make_queries(spec, data, burst, seed=int(rng.integers(1e6))))
-        d, i = engine.drain()
-        total += burst
+        engine.drain()
         print(f"burst of {burst:3d} served; engine stats: {engine.summary()}")
 
     # quality check on a fresh batch
@@ -41,12 +39,37 @@ def main():
     _, ti = brute_force_l1(jnp.asarray(data), jnp.asarray(q), 10)
     print("recall@10:", round(recall(i, np.asarray(ti)), 4))
 
-    # checkpoint the node state, simulate a crash, restore, re-serve
+    # live mutation: insert fresh points, query them, delete, verify gone
+    new_pts = (rng.integers(0, spec.universe // 2, (400, spec.dim)) * 2
+               ).astype(np.int32)
+    gids = engine.insert(new_pts)          # crosses the watermark -> compacts
+    engine.submit(new_pts[:64])
+    d, i = engine.drain()
+    hit = float((i[:, 0] == gids[:64]).mean())
+    print(f"inserted {len(gids)} pts; self-hit@1 on inserts: {hit:.2f}; "
+          f"stats: {engine.summary()}")
+    assert hit == 1.0
+
+    engine.delete(gids)
+    engine.submit(new_pts[:64])
+    d, i = engine.drain()
+    assert not np.isin(i, gids).any(), "deleted points must never be returned"
+    print("deleted inserts; none returned post-delete. "
+          f"segments={engine.index.num_segments} "
+          f"tombstones={engine.index.num_tombstones}")
+
+    # checkpoint the node (payload = compacted IndexState + gids so every
+    # acknowledged insert/delete survives), simulate a crash, restore,
+    # re-serve
+    payload = engine.checkpoint_payload()
+    engine.submit(q)
+    d, i = engine.drain()
     mgr = CheckpointManager("/tmp/repro_serving_ckpt", keep=1)
-    mgr.save(1, engine.state)
-    restored = mgr.restore(1, engine.state)
-    d2, i2 = query_index(cfg, restored, jnp.asarray(q))
-    same = bool((np.asarray(d2) == d).all())
+    mgr.save(1, payload)
+    r_state, r_gids, r_next = mgr.restore(1, payload)
+    node = SegmentedIndex.from_checkpoint(cfg, r_state, r_gids, r_next)
+    d2, i2 = node.query(jnp.asarray(q))
+    same = bool((np.asarray(d2) == d).all()) and bool((np.asarray(i2) == i).all())
     print("restored-node results identical:", same)
     assert same
 

@@ -1,1 +1,2 @@
-from . import baselines, hashes, index, multiprobe, probability, walks  # noqa: F401
+from . import (baselines, hashes, index, multiprobe, pipeline,  # noqa: F401
+               probability, segments, walks)

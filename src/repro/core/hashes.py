@@ -17,6 +17,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import walks as walks_lib
 
@@ -25,6 +26,7 @@ __all__ = [
     "make_rw_params",
     "make_cp_params",
     "make_gp_params",
+    "params_fingerprint",
     "raw_hash",
     "bucket_and_offsets",
     "mix_keys",
@@ -109,6 +111,27 @@ def make_cp_params(key, num_tables, num_hashes, dim, width) -> LshParams:
 
 def make_gp_params(key, num_tables, num_hashes, dim, width) -> LshParams:
     return _make_proj_params(key, "gaussian", num_tables, num_hashes, dim, width)
+
+
+def params_fingerprint(params: LshParams) -> int:
+    """Cheap content hash of a parameter set.
+
+    Segments of one ``core.segments.SegmentedIndex`` must share hash
+    functions bit-for-bit, or their per-segment top-k lists are drawn from
+    incompatible bucketings and the merge is silently wrong.  Segment
+    construction and ``compact()`` assert equal fingerprints instead of
+    comparing whole walk tables / projection matrices every time.
+    """
+    import hashlib
+
+    h = hashlib.sha1()
+    h.update(f"{params.family}:{params.width}".encode())
+    for leaf in jax.tree_util.tree_leaves(
+            (params.offsets, params.mix_a, params.mix_c, params.walks, params.proj)):
+        arr = np.asarray(leaf)
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return int.from_bytes(h.digest()[:8], "big")
 
 
 def raw_hash(params: LshParams, points: jax.Array, impl: str = "gather") -> jax.Array:

@@ -6,18 +6,19 @@ TPU-idiomatic design described in DESIGN.md Sect. 2:
   build : raw-hash all points -> bucket vectors -> uint32 mixed keys ->
           one sort per table.  Collective-free; embarrassingly shardable by
           dataset rows.
-  query : raw-hash queries -> epicenter offsets -> template instantiation
-          (sort + take_along_axis; paper refinement 3) -> probe keys ->
-          searchsorted -> bounded candidate gather -> dedup -> exact L1
-          rerank (chunked scan, optional Pallas kernel) -> top-k.
+  query : the staged pipeline of ``core.pipeline`` (hash -> probe-gen ->
+          bucket-lookup -> candidate-gather -> dedup -> exact L1 rerank),
+          composed here over an ``IndexState``.  The distributed path and
+          the serving engine compose the same stages (DESIGN.md Sect. 3).
 
-Everything is statically shaped and jit/vmap/shard_map friendly.
+Everything is statically shaped and jit/vmap/shard_map friendly.  For the
+mutable (insert/delete/compact) variant see ``core.segments``.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +26,8 @@ import numpy as np
 
 from . import hashes as hashes_lib
 from . import multiprobe as mp_lib
+from . import pipeline as pipe
+from .pipeline import l1_distance_chunked  # re-export (legacy import path)
 
 __all__ = ["IndexConfig", "IndexState", "build_index", "query_index", "l1_distance_chunked"]
 
@@ -106,13 +109,17 @@ def build_index(
     dataset: jax.Array,
     row_offset: jax.Array | int = 0,
     params: Optional[hashes_lib.LshParams] = None,
+    template: Optional[jax.Array] = None,
 ) -> IndexState:
     """Build the index over one dataset shard.  Collective-free.
 
     ``params`` may be passed in so that all shards share identical hash
     functions (required for distributed correctness); if None they are
     generated from ``key`` (fine for single-shard use since the same key
-    yields the same params on every shard).
+    yields the same params on every shard).  ``template`` likewise may be
+    passed to reuse the (cfg-only-dependent) probing template — the
+    segmented index rebuilds small segments often and the host-side
+    template construction is not free.
     """
     n, dim = dataset.shape
     if params is None:
@@ -126,7 +133,8 @@ def build_index(
     order = jnp.argsort(keys_t, axis=-1)
     sorted_keys = jnp.take_along_axis(keys_t, order, axis=-1)
     sorted_ids = order.astype(jnp.int32)
-    template = jnp.asarray(make_template(cfg))
+    if template is None:
+        template = jnp.asarray(make_template(cfg))
     return IndexState(
         params=params,
         sorted_keys=sorted_keys,
@@ -142,102 +150,19 @@ def build_index(
 # --------------------------------------------------------------------------
 
 def _probe_candidate_ids(cfg: IndexConfig, state: IndexState, queries: jax.Array):
-    """Multi-probe -> candidate local row ids.
+    """Multi-probe -> candidate local row ids (pipeline stages 1-5).
 
     returns ids (Q, L*P*C) int32 (sentinel n for invalid) — deduplicated.
     """
-    q = queries.shape[0]
-    l, m = cfg.num_tables, cfg.num_hashes
-    p, c = cfg.probes_per_table, cfg.candidate_cap
-    n = state.dataset.shape[0]
-
-    f = hashes_lib.raw_hash(state.params, queries, impl=cfg.hash_impl)  # (Q,L,M)
-    bucket, x_neg = hashes_lib.bucket_and_offsets(state.params, f)
-    # (Q, L, P, M) perturbations — paper refinement 3, batched.
-    deltas = mp_lib.instantiate_template(state.template, x_neg, float(cfg.width))
-    probe_buckets = bucket[:, :, None, :] + deltas.astype(jnp.int32)
-    # mix_keys expects (..., L, M): move the probe axis ahead of L.
-    probe_keys = hashes_lib.mix_keys(
-        state.params, probe_buckets.transpose(0, 2, 1, 3))              # (Q,P,L)
-    probe_keys = probe_keys.transpose(0, 2, 1)                          # (Q,L,P)
-
-    # searchsorted per table.
-    def per_table(sk, pk):  # sk (n,), pk (Q,P)
-        lo = jnp.searchsorted(sk, pk, side="left")
-        hi = jnp.searchsorted(sk, pk, side="right")
-        return lo, hi
-
-    lo, hi = jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
-        state.sorted_keys, probe_keys)                                  # (Q,L,P)
-    slots = lo[..., None] + jnp.arange(c, dtype=lo.dtype)               # (Q,L,P,C)
-    valid = slots < jnp.minimum(hi, lo + c)[..., None]
-    slots = jnp.clip(slots, 0, n - 1)
-
-    def gather_ids(sid, sl):  # sid (n,), sl (Q,P,C)
-        return sid[sl]
-
-    ids = jax.vmap(gather_ids, in_axes=(0, 1), out_axes=1)(
-        state.sorted_ids, slots)                                        # (Q,L,P,C)
-    ids = jnp.where(valid, ids, n).reshape(q, l * p * c)
-
-    # Dedup: sort ascending; equal-adjacent -> sentinel.
-    ids = jnp.sort(ids, axis=-1)
-    dup = jnp.concatenate(
-        [jnp.zeros((q, 1), bool), ids[:, 1:] == ids[:, :-1]], axis=-1)
-    return jnp.where(dup, n, ids)
-
-
-def l1_distance_chunked(
-    dataset: jax.Array, queries: jax.Array, ids: jax.Array, k: int,
-    chunk: int, use_kernel: bool = False,
-) -> Tuple[jax.Array, jax.Array]:
-    """Exact L1 rerank of gathered candidates with a running top-k.
-
-    dataset (n, m) int; queries (Q, m) int; ids (Q, Ctot) int32 with sentinel
-    n marking invalid.  Returns (dists (Q,k) int32, ids (Q,k) int32); invalid
-    entries have dist = INT32_MAX/2 and id = -1.
-    """
-    n = dataset.shape[0]
-    q, ctot = ids.shape
-    big = jnp.int32(np.iinfo(np.int32).max // 2)
-    pad = (-ctot) % chunk
-    if pad:
-        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=n)
-    steps = ids.shape[1] // chunk
-    ids_steps = ids.reshape(q, steps, chunk).transpose(1, 0, 2)     # (S,Q,c)
-
-    if use_kernel:
-        from repro.kernels import ops as kops
-
-    def body(carry, step_ids):
-        best_d, best_i = carry                                      # (Q,k)
-        sl = jnp.clip(step_ids, 0, n - 1)                           # (Q,c)
-        rows = dataset[sl]                                          # (Q,c,m)
-        if use_kernel:
-            d = kops.l1_distance_rows(queries, rows)                # (Q,c)
-        else:
-            # HBM gather stays at dataset dtype (int16 under §Perf C1);
-            # the |diff| accumulation is widened to int32 in registers.
-            diff = rows.astype(jnp.int32) - queries[:, None, :].astype(jnp.int32)
-            d = jnp.abs(diff).sum(axis=-1).astype(jnp.int32)
-        d = jnp.where(step_ids >= n, big, d)
-        cd = jnp.concatenate([best_d, d], axis=-1)
-        ci = jnp.concatenate([best_i, step_ids], axis=-1)
-        nd, sel = jax.lax.top_k(-cd, k)
-        return (-nd, jnp.take_along_axis(ci, sel, axis=-1)), None
-
-    init = (jnp.full((q, k), big, jnp.int32), jnp.full((q, k), n, jnp.int32))
-    (best_d, best_i), _ = jax.lax.scan(body, init, ids_steps)
-    best_i = jnp.where(best_d >= big, -1, best_i)
-    return best_d, best_i
+    return pipe.probe_candidates(
+        cfg, state.params, state.template, state.sorted_keys,
+        state.sorted_ids, state.dataset.shape[0], queries)
 
 
 @partial(jax.jit, static_argnums=0)
 def query_index(cfg: IndexConfig, state: IndexState, queries: jax.Array):
     """Batched ANN query.  Returns (dists (Q,k) int32, global_ids (Q,k) int32)."""
     ids = _probe_candidate_ids(cfg, state, queries)
-    d, i = l1_distance_chunked(
-        state.dataset, queries, ids, cfg.k, cfg.rerank_chunk,
-        use_kernel=(cfg.hash_impl == "pallas"))
+    d, i = pipe.stage_rerank(cfg, state.dataset, queries, ids)
     gid = jnp.where(i >= 0, i + state.row_offset, -1)
     return d, gid

@@ -1,0 +1,251 @@
+"""Staged MP-RW-LSH query pipeline (DESIGN.md Sect. 3).
+
+The query flow is decomposed into pure, statically-shaped stages
+
+    hash -> probe-gen -> bucket-lookup -> candidate-gather -> dedup
+         [-> tombstone] -> rerank -> merge
+
+so that the single-shard path (``core.index.query_index``), the shard_map
+path (``launch.dist_index``), and the serving engine (``serve.engine``)
+compose the *same* functions instead of re-implementing the flow.  Every
+stage takes raw arrays (no ``IndexState``), which is what lets the
+shard_map body call them on its per-shard slices directly.
+
+Stage contracts (Q queries, L tables, M hashes, P probes/table, C cap):
+
+  stage_hash       : queries (Q, m)            -> bucket, x_neg (Q, L, M)
+  stage_probe_keys : bucket, x_neg             -> probe_keys (Q, L, P) uint32
+  stage_bucket_lookup : sorted_keys, probe_keys -> lo, hi (Q, L, P)
+  stage_candidate_gather : sorted_ids, lo, hi  -> ids (Q, L*P*C), sentinel n
+  stage_dedup      : ids                       -> ids, duplicates -> sentinel
+  stage_tombstone  : ids, gids, tombstones     -> ids, deleted -> sentinel
+  stage_rerank     : dataset, queries, ids     -> (dists, ids) (Q, k) asc
+  stage_merge_pair : two (Q, k) ascending lists -> one (Q, k) ascending list
+  stage_merge_concat : (Q, R*k) stacked lists  -> (Q, k)
+
+The composition ``probe_candidates`` + ``stage_rerank`` is bit-identical to
+the pre-refactor monolithic ``query_index`` (tests/test_segments.py proves
+it against a frozen copy of the seed implementation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashes as hashes_lib
+from . import multiprobe as mp_lib
+
+__all__ = [
+    "BIG_DIST",
+    "stage_hash",
+    "stage_probe_keys",
+    "stage_bucket_lookup",
+    "stage_candidate_gather",
+    "stage_dedup",
+    "stage_tombstone",
+    "probe_candidates",
+    "stage_rerank",
+    "stage_merge_pair",
+    "stage_merge_concat",
+    "l1_distance_chunked",
+]
+
+# Sentinel distance for invalid/padded slots; iinfo//2 so two of them still
+# fit in int32 when summed inside merge kernels.
+BIG_DIST = np.iinfo(np.int32).max // 2
+
+
+def stage_hash(cfg, params: hashes_lib.LshParams, queries: jax.Array):
+    """Raw-hash + quantize.  Returns (bucket (Q,L,M) int32, x_neg (Q,L,M))."""
+    f = hashes_lib.raw_hash(params, queries, impl=cfg.hash_impl)
+    return hashes_lib.bucket_and_offsets(params, f)
+
+
+def stage_probe_keys(
+    cfg, params: hashes_lib.LshParams, template: jax.Array,
+    bucket: jax.Array, x_neg: jax.Array,
+) -> jax.Array:
+    """Instantiate the universal template and mix probe buckets into keys.
+
+    Returns (Q, L, P) uint32 probe keys (P = num_probes + 1, epicenter first).
+    """
+    # (Q, L, P, M) perturbations — paper refinement 3, batched.
+    deltas = mp_lib.instantiate_template(template, x_neg, float(cfg.width))
+    probe_buckets = bucket[:, :, None, :] + deltas.astype(jnp.int32)
+    # mix_keys expects (..., L, M): move the probe axis ahead of L.
+    probe_keys = hashes_lib.mix_keys(
+        params, probe_buckets.transpose(0, 2, 1, 3))            # (Q, P, L)
+    return probe_keys.transpose(0, 2, 1)                        # (Q, L, P)
+
+
+def stage_bucket_lookup(sorted_keys: jax.Array, probe_keys: jax.Array):
+    """searchsorted per table.  Returns (lo, hi) (Q, L, P) bucket extents."""
+
+    def per_table(sk, pk):  # sk (n,), pk (Q, P)
+        lo = jnp.searchsorted(sk, pk, side="left")
+        hi = jnp.searchsorted(sk, pk, side="right")
+        return lo, hi
+
+    return jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
+        sorted_keys, probe_keys)
+
+
+def stage_candidate_gather(
+    cfg, sorted_ids: jax.Array, lo: jax.Array, hi: jax.Array, n: int,
+) -> jax.Array:
+    """Gather up to candidate_cap row ids per probed bucket.
+
+    Returns (Q, L*P*C) int32 local ids with sentinel n for empty slots.
+    """
+    q = lo.shape[0]
+    l, p, c = cfg.num_tables, cfg.probes_per_table, cfg.candidate_cap
+    slots = lo[..., None] + jnp.arange(c, dtype=lo.dtype)       # (Q,L,P,C)
+    valid = slots < jnp.minimum(hi, lo + c)[..., None]
+    slots = jnp.clip(slots, 0, n - 1)
+
+    def gather_ids(sid, sl):  # sid (n,), sl (Q, P, C)
+        return sid[sl]
+
+    ids = jax.vmap(gather_ids, in_axes=(0, 1), out_axes=1)(
+        sorted_ids, slots)                                      # (Q,L,P,C)
+    return jnp.where(valid, ids, n).reshape(q, l * p * c)
+
+
+def stage_dedup(ids: jax.Array, n: int) -> jax.Array:
+    """Sort ascending; equal-adjacent -> sentinel n.
+
+    Guarantees no candidate is reranked twice even when it falls in several
+    tables/probes (sentinel slots sort to the tail and stay sentinel).
+    """
+    q = ids.shape[0]
+    ids = jnp.sort(ids, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros((q, 1), bool), ids[:, 1:] == ids[:, :-1]], axis=-1)
+    return jnp.where(dup, n, ids)
+
+
+def stage_tombstone(
+    ids: jax.Array, gids: jax.Array, tombstones: jax.Array, n: int,
+) -> jax.Array:
+    """Mask deleted points out of the candidate list (DESIGN.md Sect. 3).
+
+    ids        : (Q, Ctot) local ids with sentinel n.
+    gids       : (n,) global id of each local row.
+    tombstones : (t,) ascending int32 global ids, padded with INT32_MAX
+                 (the pad value matches no real gid, so no count is needed).
+    Applied *before* rerank so a deleted point can never occupy a top-k slot.
+    """
+    gid = gids[jnp.clip(ids, 0, n - 1)]
+    pos = jnp.searchsorted(tombstones, gid)
+    hit = tombstones[jnp.clip(pos, 0, tombstones.shape[0] - 1)] == gid
+    return jnp.where((ids < n) & hit, n, ids)
+
+
+def probe_candidates(
+    cfg, params: hashes_lib.LshParams, template: jax.Array,
+    sorted_keys: jax.Array, sorted_ids: jax.Array, n: int,
+    queries: jax.Array,
+) -> jax.Array:
+    """hash -> probe-gen -> bucket-lookup -> gather -> dedup, composed.
+
+    Returns deduplicated candidate local ids (Q, L*P*C), sentinel n.
+    """
+    bucket, x_neg = stage_hash(cfg, params, queries)
+    probe_keys = stage_probe_keys(cfg, params, template, bucket, x_neg)
+    lo, hi = stage_bucket_lookup(sorted_keys, probe_keys)
+    ids = stage_candidate_gather(cfg, sorted_ids, lo, hi, n)
+    return stage_dedup(ids, n)
+
+
+# --------------------------------------------------------------------------
+# Rerank + merge stages
+# --------------------------------------------------------------------------
+
+def l1_distance_chunked(
+    dataset: jax.Array, queries: jax.Array, ids: jax.Array, k: int,
+    chunk: int, use_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact L1 rerank of gathered candidates with a running top-k.
+
+    dataset (n, m) int; queries (Q, m) int; ids (Q, Ctot) int32 with sentinel
+    n marking invalid.  Returns (dists (Q,k) int32, ids (Q,k) int32) sorted
+    ascending; invalid entries have dist = INT32_MAX/2 and id = -1.
+    """
+    n = dataset.shape[0]
+    q, ctot = ids.shape
+    big = jnp.int32(BIG_DIST)
+    pad = (-ctot) % chunk
+    if pad:
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=n)
+    steps = ids.shape[1] // chunk
+    ids_steps = ids.reshape(q, steps, chunk).transpose(1, 0, 2)     # (S,Q,c)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+    def body(carry, step_ids):
+        best_d, best_i = carry                                      # (Q,k)
+        sl = jnp.clip(step_ids, 0, n - 1)                           # (Q,c)
+        rows = dataset[sl]                                          # (Q,c,m)
+        if use_kernel:
+            d = kops.l1_distance_rows(queries, rows)                # (Q,c)
+        else:
+            # HBM gather stays at dataset dtype (int16 under §Perf C1);
+            # the |diff| accumulation is widened to int32 in registers.
+            diff = rows.astype(jnp.int32) - queries[:, None, :].astype(jnp.int32)
+            d = jnp.abs(diff).sum(axis=-1).astype(jnp.int32)
+        d = jnp.where(step_ids >= n, big, d)
+        cd = jnp.concatenate([best_d, d], axis=-1)
+        ci = jnp.concatenate([best_i, step_ids], axis=-1)
+        nd, sel = jax.lax.top_k(-cd, k)
+        return (-nd, jnp.take_along_axis(ci, sel, axis=-1)), None
+
+    init = (jnp.full((q, k), big, jnp.int32), jnp.full((q, k), n, jnp.int32))
+    (best_d, best_i), _ = jax.lax.scan(body, init, ids_steps)
+    best_i = jnp.where(best_d >= big, -1, best_i)
+    return best_d, best_i
+
+
+def stage_rerank(
+    cfg, dataset: jax.Array, queries: jax.Array, ids: jax.Array,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact-rerank stage; kernel choice defaults to the cfg's hash impl."""
+    if use_kernel is None:
+        use_kernel = cfg.hash_impl == "pallas"
+    return l1_distance_chunked(
+        dataset, queries, ids, cfg.k, cfg.rerank_chunk, use_kernel=use_kernel)
+
+
+def stage_merge_pair(
+    da: jax.Array, ia: jax.Array, db: jax.Array, ib: jax.Array,
+    use_kernel: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Merge two ascending (Q, k) top-k lists into one.
+
+    Invalid entries must carry dist >= BIG_DIST (id -1 or sentinel).  With
+    ``use_kernel`` the bitonic Pallas ``topk_merge`` runs (the same kernel
+    the distributed ring merge uses); the fallback is concat + lax.top_k.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.topk_merge(da, ia, db, ib)
+    k = da.shape[-1]
+    cd = jnp.concatenate([da, db], axis=-1)
+    ci = jnp.concatenate([ia, ib], axis=-1)
+    nd, sel = jax.lax.top_k(-cd, k)
+    return -nd, jnp.take_along_axis(ci, sel, axis=-1)
+
+
+def stage_merge_concat(
+    ds: jax.Array, is_: jax.Array, k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Merge R stacked top-k lists at once: (Q, R*k) -> (Q, k) ascending.
+
+    The all-gather distributed merge and any >2-way host merge use this.
+    """
+    nd, sel = jax.lax.top_k(-ds, k)
+    return -nd, jnp.take_along_axis(is_, sel, axis=-1)

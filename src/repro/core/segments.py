@@ -1,0 +1,354 @@
+"""Segmented mutable MP-RW-LSH index (DESIGN.md Sect. 3).
+
+The paper builds once and queries forever; a serving system needs inserts
+and deletes without an O(n log n) rebuild per mutation.  LSM-style layout:
+
+  * an ordered list of immutable sorted **segments** — each is a plain
+    ``IndexState`` (one sort per table) over its own point set, plus a
+    ``gids`` vector mapping local rows to stable global ids;
+  * a small mutable **delta buffer** of freshly inserted points.  It is
+    unindexed; queries scan it with the exact L1 rerank stage (it is tiny
+    by construction, so the scan is cheaper than hashing it per mutation);
+  * a **tombstone set** of deleted global ids, applied at the candidate
+    stage of every query (``pipeline.stage_tombstone``) so a dead point can
+    never occupy a top-k slot;
+  * ``compact()`` merges segments + delta - tombstones back into ONE
+    segment, after which a query is bit-identical (in distances) to a fresh
+    ``build_index`` over the surviving points in insertion order.
+
+All query work is statically shaped and jit-compiled: the delta buffer has
+a fixed capacity (padded; a row count masks the tail), tombstones live in a
+power-of-two device array padded with INT32_MAX (the pad matches no real
+gid, so no count is carried), and the per-segment top-k lists are folded
+with the same bitonic ``topk_merge`` kernel the distributed ring merge
+uses — the single-host path exercises the distributed merge machinery.
+
+Every segment shares one ``LshParams`` (the paper's fixed cost, Sect. 3.2):
+a point hashes to the same buckets whichever segment holds it, which is
+what makes per-segment top-k lists mergeable.  ``hashes.params_fingerprint``
+guards this invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashes as hashes_lib
+from . import pipeline as pipe
+from .index import IndexConfig, IndexState, build_index, make_params, make_template
+
+__all__ = ["Segment", "SegmentedIndex"]
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass
+class Segment:
+    """One immutable sorted segment: an IndexState plus stable global ids."""
+
+    state: IndexState                 # built with row_offset = 0
+    gids: jax.Array                   # (n,) int32 global row ids
+    fingerprint: int                  # hashes.params_fingerprint(state.params)
+
+    @property
+    def size(self) -> int:
+        return int(self.gids.shape[0])
+
+
+@partial(jax.jit, static_argnums=0)
+def _query_segment(cfg: IndexConfig, state: IndexState, gids: jax.Array,
+                   tombstones: jax.Array, queries: jax.Array):
+    """Full pipeline over one segment: probe -> tombstone -> rerank -> gid."""
+    n = state.dataset.shape[0]
+    ids = pipe.probe_candidates(
+        cfg, state.params, state.template, state.sorted_keys,
+        state.sorted_ids, n, queries)
+    ids = pipe.stage_tombstone(ids, gids, tombstones, n)
+    d, i = pipe.stage_rerank(cfg, state.dataset, queries, ids)
+    gid = jnp.where(i >= 0, gids[jnp.clip(i, 0, n - 1)], -1)
+    return d, gid
+
+
+@partial(jax.jit, static_argnums=0)
+def _query_delta(cfg: IndexConfig, buffer: jax.Array, gids: jax.Array,
+                 count: jax.Array, tombstones: jax.Array, queries: jax.Array):
+    """Exact scan of the delta buffer via the rerank stage (no hashing)."""
+    cap = buffer.shape[0]
+    ids = jnp.broadcast_to(
+        jnp.where(jnp.arange(cap, dtype=jnp.int32) < count,
+                  jnp.arange(cap, dtype=jnp.int32), cap),
+        (queries.shape[0], cap))
+    ids = pipe.stage_tombstone(ids, gids, tombstones, cap)
+    d, i = pipe.stage_rerank(cfg, buffer, queries, ids)
+    gid = jnp.where(i >= 0, gids[jnp.clip(i, 0, cap - 1)], -1)
+    return d, gid
+
+
+class SegmentedIndex:
+    """Mutable index = immutable segments + delta buffer + tombstones.
+
+    Host-side orchestrator; all heavy work happens in jitted pipeline
+    stages.  Not thread-safe: the serving engine serializes mutations and
+    compactions against queries.
+    """
+
+    def __init__(self, cfg: IndexConfig, key: jax.Array, dim: int,
+                 delta_cap: int = 1024,
+                 params: Optional[hashes_lib.LshParams] = None):
+        if params is None:
+            params = make_params(cfg, key, dim)
+        self.cfg = cfg
+        self.dim = dim
+        self.delta_cap = int(delta_cap)
+        self.params = params
+        self.fingerprint = hashes_lib.params_fingerprint(params)
+        # cfg-only-dependent; computed once, reused by every seal/compact
+        self._template = jnp.asarray(make_template(cfg))
+        self.segments: List[Segment] = []
+        self._delta_points = np.zeros((self.delta_cap, dim), np.int32)
+        self._delta_gids = np.full((self.delta_cap,), -1, np.int32)
+        self._delta_count = 0
+        self._tombstones: set = set()
+        self._next_gid = 0
+        self.compactions = 0
+        # device-side snapshots of the mutable state, rebuilt lazily after a
+        # mutation so steady-state queries pay no host copies / transfers
+        self._delta_cache: Optional[Tuple[jax.Array, jax.Array]] = None
+        self._tomb_cache: Optional[jax.Array] = None
+
+    @classmethod
+    def from_dataset(cls, cfg: IndexConfig, key: jax.Array,
+                     dataset: jax.Array, delta_cap: int = 1024,
+                     params: Optional[hashes_lib.LshParams] = None,
+                     ) -> "SegmentedIndex":
+        """Seed with one segment holding ``dataset`` (gids 0..n-1).
+
+        Bulk path: one build_index over the whole dataset, no delta churn.
+        """
+        dataset = jnp.asarray(dataset)
+        n, dim = dataset.shape
+        idx = cls(cfg, key, int(dim), delta_cap, params)
+        state = build_index(cfg, key, dataset, params=idx.params,
+                            template=idx._template)
+        idx.segments = [Segment(state=state,
+                                gids=jnp.arange(n, dtype=jnp.int32),
+                                fingerprint=idx.fingerprint)]
+        idx._next_gid = int(n)
+        return idx
+
+    @classmethod
+    def from_checkpoint(cls, cfg: IndexConfig, state: IndexState,
+                        gids: jax.Array, next_gid,
+                        delta_cap: int = 1024) -> "SegmentedIndex":
+        """Rebuild a serving index from a ``checkpoint_payload()`` triple.
+
+        ``next_gid`` must come from the payload — recomputing it as
+        ``max(gids) + 1`` would re-issue the ids of points deleted and
+        compacted away before the checkpoint, breaking gid stability for
+        clients that still hold them.
+        """
+        gids = jnp.asarray(gids, jnp.int32)
+        idx = cls(cfg, jax.random.PRNGKey(0), int(state.dataset.shape[1]),
+                  delta_cap, params=state.params)
+        idx.segments = [Segment(state=state, gids=gids,
+                                fingerprint=idx.fingerprint)]
+        idx._next_gid = int(next_gid)
+        return idx
+
+    def checkpoint_payload(self) -> Tuple[IndexState, jax.Array, jax.Array]:
+        """Durable shard payload: ``(IndexState, gids, next_gid)``.
+
+        Compacts first when the index carries uncheckpointable mutations
+        (extra segments, delta inserts, tombstones), so the payload always
+        reflects every acknowledged insert/delete.  Restore with
+        ``SegmentedIndex.from_checkpoint``.
+        """
+        if (self.num_segments != 1 or self._delta_count
+                or self._tombstones):
+            self.compact()
+        if not self.segments:
+            raise RuntimeError("empty index; nothing to checkpoint")
+        seg = self.segments[0]
+        return seg.state, seg.gids, jnp.int32(self._next_gid)
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def delta_fill(self) -> float:
+        return self._delta_count / self.delta_cap
+
+    @property
+    def num_live(self) -> int:
+        total = sum(s.size for s in self.segments) + self._delta_count
+        return total - len(self._tombstones)
+
+    @property
+    def num_tombstones(self) -> int:
+        return len(self._tombstones)
+
+    # -- mutations --------------------------------------------------------
+
+    def insert(self, points) -> np.ndarray:
+        """Append points to the delta buffer; returns their global ids.
+
+        A full delta buffer is sealed into an immutable segment (one sort
+        per table over delta_cap points — the LSM 'minor compaction').
+        """
+        pts = np.atleast_2d(np.asarray(points, np.int32))
+        if pts.shape[1] != self.dim:
+            raise ValueError(f"expected dim {self.dim}, got {pts.shape[1]}")
+        gids = np.arange(self._next_gid, self._next_gid + pts.shape[0],
+                         dtype=np.int32)
+        self._next_gid += pts.shape[0]
+        pos = 0
+        while pos < pts.shape[0]:
+            if self._delta_count == self.delta_cap:
+                self._seal_delta()
+            take = min(self.delta_cap - self._delta_count, pts.shape[0] - pos)
+            lo = self._delta_count
+            self._delta_points[lo:lo + take] = pts[pos:pos + take]
+            self._delta_gids[lo:lo + take] = gids[pos:pos + take]
+            self._delta_count += take
+            pos += take
+        self._delta_cache = None
+        return gids
+
+    def delete(self, gids) -> int:
+        """Tombstone global ids; returns how many were newly tombstoned.
+
+        Unknown / already-deleted ids are ignored (idempotent), so replayed
+        delete requests are safe.  Caveat: a gid already removed by an
+        earlier compaction is indistinguishable from a live one here, so
+        re-deleting it costs one tombstone slot and skews the advisory
+        ``num_live`` until the next compaction (query results unaffected).
+        """
+        before = len(self._tombstones)
+        for g in np.atleast_1d(np.asarray(gids, np.int64)):
+            if 0 <= g < self._next_gid:
+                self._tombstones.add(int(g))
+        if len(self._tombstones) != before:
+            self._tomb_cache = None
+        return len(self._tombstones) - before
+
+    def _seal_delta(self) -> None:
+        """Delta buffer -> immutable segment (shared params, row_offset 0)."""
+        n = self._delta_count
+        if n == 0:
+            return
+        # .copy() is load-bearing: jnp.asarray of a numpy buffer can be
+        # zero-copy on CPU, and the delta buffer is reused right after.
+        state = build_index(
+            self.cfg, jax.random.PRNGKey(0),
+            jnp.asarray(self._delta_points[:n].copy()), params=self.params,
+            template=self._template)
+        self.segments.append(Segment(
+            state=state, gids=jnp.asarray(self._delta_gids[:n].copy()),
+            fingerprint=self.fingerprint))
+        self._delta_count = 0
+        self._delta_gids[:] = -1
+        self._delta_cache = None
+
+    def compact(self) -> None:
+        """Major compaction: segments + delta - tombstones -> one segment.
+
+        Surviving points keep insertion order and their global ids, so a
+        post-compaction query returns the same distances as a fresh
+        ``build_index`` over the surviving points (tests prove this).
+        """
+        parts, gid_parts = [], []
+        for seg in self.segments:
+            if seg.fingerprint != self.fingerprint:
+                raise ValueError("segment params diverged; cannot compact")
+            parts.append(np.asarray(seg.state.dataset, np.int32))
+            gid_parts.append(np.asarray(seg.gids))
+        if self._delta_count:
+            parts.append(self._delta_points[:self._delta_count].copy())
+            gid_parts.append(self._delta_gids[:self._delta_count].copy())
+        if not parts:
+            return
+        data = np.concatenate(parts)
+        gids = np.concatenate(gid_parts)
+        # insertion order + drop tombstoned rows
+        order = np.argsort(gids, kind="stable")
+        data, gids = data[order], gids[order]
+        if self._tombstones:
+            dead = np.asarray(sorted(self._tombstones), np.int32)
+            live = ~np.isin(gids, dead)
+            data, gids = data[live], gids[live]
+        self.segments = []
+        self._delta_count = 0
+        self._delta_gids[:] = -1
+        self._tombstones = set()
+        self._delta_cache = None
+        self._tomb_cache = None
+        self.compactions += 1
+        if data.shape[0] == 0:
+            return
+        state = build_index(self.cfg, jax.random.PRNGKey(0),
+                            jnp.asarray(data), params=self.params,
+                            template=self._template)
+        self.segments = [Segment(state=state, gids=jnp.asarray(gids),
+                                 fingerprint=self.fingerprint)]
+
+    # -- query ------------------------------------------------------------
+
+    def _tombstone_array(self) -> jax.Array:
+        """Ascending device array padded to a power of two with INT32_MAX.
+
+        Cached between mutations — steady-state queries reuse the device
+        array instead of re-sorting and re-uploading the set every call.
+        """
+        if self._tomb_cache is None:
+            dead = sorted(self._tombstones)
+            cap = 1 << (len(dead) - 1).bit_length() if dead else 1
+            out = np.full((cap,), _INT32_MAX, np.int32)
+            out[:len(dead)] = dead
+            self._tomb_cache = jnp.asarray(out)
+        return self._tomb_cache
+
+    def _delta_arrays(self) -> Tuple[jax.Array, jax.Array]:
+        """Device snapshot of the delta buffer, cached between mutations.
+
+        The .copy() is load-bearing (zero-copy jnp.asarray would alias the
+        live buffer); caching makes it once per mutation epoch, not per
+        query.
+        """
+        if self._delta_cache is None:
+            self._delta_cache = (jnp.asarray(self._delta_points.copy()),
+                                 jnp.asarray(self._delta_gids.copy()))
+        return self._delta_cache
+
+    def query(self, queries: jax.Array, use_merge_kernel: bool = True,
+              ) -> Tuple[jax.Array, jax.Array]:
+        """Probe every segment + scan the delta; fold per-source top-k lists.
+
+        Returns (dists (Q, k) int32 ascending, gids (Q, k) int32, -1 pad).
+        Each source contributes its own candidate_cap per probed bucket, so
+        a fragmented index examines a superset of the compacted index's
+        candidates — distances can only improve until compaction.
+        """
+        queries = jnp.asarray(queries)
+        tomb = self._tombstone_array()
+        results = []
+        for seg in self.segments:
+            results.append(_query_segment(
+                self.cfg, seg.state, seg.gids, tomb, queries))
+        if self._delta_count or not results:
+            delta_pts, delta_gids = self._delta_arrays()
+            results.append(_query_delta(
+                self.cfg, delta_pts, delta_gids,
+                jnp.int32(self._delta_count), tomb, queries))
+        d, i = results[0]
+        for dn, in_ in results[1:]:
+            d, i = pipe.stage_merge_pair(d, i, dn, in_,
+                                         use_kernel=use_merge_kernel)
+        return d, i

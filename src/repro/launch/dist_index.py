@@ -23,7 +23,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import hashes as hashes_lib
-from repro.core.index import IndexConfig, IndexState, build_index, query_index, make_template
+from repro.core import pipeline as pipe
+from repro.core.index import IndexConfig, IndexState, build_index, make_template
 
 __all__ = ["dist_build_fn", "dist_query_fn", "state_specs"]
 
@@ -99,22 +100,24 @@ def dist_query_fn(cfg: IndexConfig, mesh: Mesh, merge: str = "allgather"):
     rows = _row_axes(mesh)
     nshards = int(np.prod([mesh.shape[a] for a in rows]))
     k = cfg.k
-    big = jnp.int32(np.iinfo(np.int32).max // 2)
+    big = jnp.int32(pipe.BIG_DIST)
 
     def local_query(sorted_keys, sorted_ids, dataset, row_offset,
                     params, template, queries):
-        state = IndexState(params=params, sorted_keys=sorted_keys,
-                           sorted_ids=sorted_ids, dataset=dataset,
-                           template=template, row_offset=row_offset[0])
-        d, i = query_index(cfg, state, queries)            # local top-k
+        # Same staged pipeline as the single-shard path, applied to the
+        # shard's raw slices (no IndexState round-trip inside shard_map).
+        n = dataset.shape[0]
+        ids = pipe.probe_candidates(
+            cfg, params, template, sorted_keys, sorted_ids, n, queries)
+        d, i = pipe.stage_rerank(cfg, dataset, queries, ids)   # local top-k
+        i = jnp.where(i >= 0, i + row_offset[0], -1)           # global ids
         d = jnp.where(i < 0, big, d)
         if merge == "allgather":
             dg = jax.lax.all_gather(d, rows)               # (R, Qloc, k)
             ig = jax.lax.all_gather(i, rows)
             dg = jnp.moveaxis(dg, 0, 1).reshape(d.shape[0], nshards * k)
             ig = jnp.moveaxis(ig, 0, 1).reshape(d.shape[0], nshards * k)
-            nd, sel = jax.lax.top_k(-dg, k)
-            return -nd, jnp.take_along_axis(ig, sel, axis=-1)
+            return pipe.stage_merge_concat(dg, ig, k)
         from repro.kernels import ops as kops
         size = nshards
         if merge == "ring":

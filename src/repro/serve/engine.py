@@ -3,6 +3,16 @@
 Production posture on a single process:
   * request queue -> fixed-size batches (padded to the compiled batch shape,
     so one XLA program serves any load level);
+  * a **mutable segmented index** (core.segments): ``insert``/``delete``
+    endpoints mutate the delta buffer / tombstone set without a rebuild,
+    and a compaction pass — triggered by the delta-buffer watermark or by
+    segment-count growth — folds everything back into one sorted segment.
+    Single-process it runs opportunistically between batches; the
+    multi-replica deployment runs it on the background thread pool
+    (DESIGN.md Sect. 3);
+  * queries probe every segment with the staged pipeline and fold the
+    per-segment top-k lists with the same bitonic ``topk_merge`` kernel
+    the distributed ring merge uses;
   * per-batch deadline timing + straggler hedging hook: if a shard's partial
     result misses the hedge deadline, the engine re-issues the probe batch to
     the replica group (single-process: recorded, not exercised — see
@@ -21,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import IndexConfig, IndexState, build_index, query_index
+from repro.core.index import IndexConfig, IndexState
+from repro.core.segments import SegmentedIndex
 
 __all__ = ["ServeConfig", "AnnServingEngine"]
 
@@ -31,6 +42,10 @@ class ServeConfig:
     batch_size: int = 64
     hedge_ms: float = 50.0
     max_wait_ms: float = 2.0
+    delta_cap: int = 1024          # delta-buffer capacity (points)
+    compact_watermark: float = 0.5  # delta fill fraction that triggers compaction
+    max_segments: int = 4           # segment count that triggers compaction
+    tombstone_watermark: float = 0.25  # dead/live fraction that triggers compaction
 
 
 class AnnServingEngine:
@@ -41,20 +56,90 @@ class AnnServingEngine:
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         key = key if key is not None else jax.random.PRNGKey(0)
-        self.state: IndexState = build_index(cfg, key, dataset)
+        self.index = SegmentedIndex.from_dataset(
+            cfg, key, dataset, delta_cap=serve_cfg.delta_cap)
         self._dim = dataset.shape[1]
         self._pending: List[np.ndarray] = []
         self.stats = {"batches": 0, "queries": 0, "hedges": 0,
-                      "total_ms": 0.0, "p50_ms": []}
+                      "inserts": 0, "deletes": 0,
+                      "compact_ms": 0.0, "total_ms": 0.0, "batch_ms": []}
         # warm the compiled path
         warm = jnp.zeros((serve_cfg.batch_size, self._dim), jnp.int32)
-        query_index(cfg, self.state, warm)[0].block_until_ready()
+        self.index.query(warm)[0].block_until_ready()
+
+    @property
+    def state(self) -> IndexState:
+        """The compacted index's IndexState (legacy checkpoint payload).
+
+        Refuses to hand out a partial view: with pending delta inserts,
+        tombstones, or multiple segments, a single segment's state would
+        silently drop acknowledged mutations — use ``checkpoint_payload``
+        (or ``compact()`` first).
+        """
+        idx = self.index
+        if not idx.segments:
+            raise RuntimeError("index is empty; nothing to checkpoint")
+        if idx.num_segments != 1 or idx.delta_fill > 0 or idx.num_tombstones:
+            raise RuntimeError(
+                "index has uncompacted mutations; call compact() first or "
+                "checkpoint via checkpoint_payload()")
+        return idx.segments[0].state
+
+    def checkpoint_payload(self):
+        """(IndexState, gids, next_gid) capturing every acknowledged mutation.
+
+        Compacts as needed; restore with ``SegmentedIndex.from_checkpoint``.
+        """
+        return self.index.checkpoint_payload()
+
+    # -- mutation endpoints ------------------------------------------------
+
+    def insert(self, points: np.ndarray) -> np.ndarray:
+        """Add points to the live index; returns their global ids."""
+        gids = self.index.insert(points)
+        self.stats["inserts"] += len(gids)
+        self._maybe_compact()
+        return gids
+
+    def delete(self, gids) -> int:
+        """Tombstone global ids; returns how many were newly deleted."""
+        removed = self.index.delete(gids)
+        self.stats["deletes"] += removed
+        self._maybe_compact()
+        return removed
+
+    def compact(self) -> None:
+        """Force a major compaction (also runs automatically, see below).
+
+        The compaction count lives on the index (``index.compactions``) —
+        the single source of truth ``summary()`` reports.
+        """
+        t0 = time.perf_counter()
+        self.index.compact()
+        self.stats["compact_ms"] += (time.perf_counter() - t0) * 1e3
+
+    def _maybe_compact(self) -> None:
+        """Watermark-triggered compaction (DESIGN.md Sect. 3).
+
+        Runs opportunistically between batches in this single-process
+        engine; a multi-replica deployment runs the same check on a
+        background thread against a swapped-in index copy.
+        """
+        idx = self.index
+        if (idx.delta_fill >= self.serve_cfg.compact_watermark
+                or idx.num_segments > self.serve_cfg.max_segments
+                or (idx.num_tombstones
+                    >= self.serve_cfg.tombstone_watermark
+                    * max(idx.num_live, 1))):
+            self.compact()
+
+    # -- query path --------------------------------------------------------
 
     def submit(self, queries: np.ndarray) -> None:
         for q in np.atleast_2d(queries):
             self._pending.append(q.astype(np.int32))
 
-    def _next_batch(self) -> Optional[np.ndarray]:
+    def _next_batch(self) -> Optional[Tuple[np.ndarray, int]]:
         if not self._pending:
             return None
         bs = self.serve_cfg.batch_size
@@ -75,7 +160,7 @@ class AnnServingEngine:
                 break
             batch, n_real = nb
             t0 = time.perf_counter()
-            d, i = query_index(self.cfg, self.state, jnp.asarray(batch))
+            d, i = self.index.query(jnp.asarray(batch))
             d.block_until_ready()
             ms = (time.perf_counter() - t0) * 1e3
             if ms > self.serve_cfg.hedge_ms:
@@ -85,20 +170,31 @@ class AnnServingEngine:
             self.stats["batches"] += 1
             self.stats["queries"] += n_real
             self.stats["total_ms"] += ms
-            self.stats["p50_ms"].append(ms)
+            self.stats["batch_ms"].append(ms)
             out_d.append(np.asarray(d)[:n_real])
             out_i.append(np.asarray(i)[:n_real])
+        self._maybe_compact()
         if not out_d:
             return np.zeros((0, self.cfg.k)), np.zeros((0, self.cfg.k))
         return np.concatenate(out_d), np.concatenate(out_i)
 
     def summary(self) -> dict:
-        lat = sorted(self.stats["p50_ms"]) or [0.0]
+        lat = np.asarray(self.stats["batch_ms"] or [0.0], np.float64)
+        total_s = self.stats["total_ms"] / 1e3
         return {
             "queries": self.stats["queries"],
             "batches": self.stats["batches"],
             "hedges": self.stats["hedges"],
-            "mean_batch_ms": self.stats["total_ms"] / max(self.stats["batches"], 1),
-            "p50_batch_ms": lat[len(lat) // 2],
-            "p99_batch_ms": lat[min(len(lat) - 1, int(len(lat) * 0.99))],
+            "inserts": self.stats["inserts"],
+            "deletes": self.stats["deletes"],
+            "compactions": self.index.compactions,
+            "segments": self.index.num_segments,
+            "delta_fill": round(self.index.delta_fill, 4),
+            "mean_batch_ms": float(lat.mean()),
+            # quantiles over per-batch latencies (interpolated, not an
+            # index into the batch list as if samples were per-query)
+            "p50_batch_ms": float(np.percentile(lat, 50)),
+            "p99_batch_ms": float(np.percentile(lat, 99)),
+            "queries_per_s": (self.stats["queries"] / total_s
+                              if total_s > 0 else 0.0),
         }
