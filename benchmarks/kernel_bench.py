@@ -5,15 +5,25 @@ the structural quantity we report is the roofline-relevant arithmetic
 intensity per kernel (FLOPs or bytes per output element), which is
 hardware-independent, plus wall time of the jnp reference for regression
 tracking.
+
+``--rerank-json BENCH_rerank.json`` (default on) additionally runs the
+rerank-stage benchmark — fused (sort-free dedup + gather+L1+running-top-k)
+vs the legacy sort-dedup + chunked scan + lax.top_k vs a naive full
+materialize + sort — and emits a machine-readable JSON so the perf
+trajectory is tracked from ISSUE 2 onward.  ``--smoke`` shrinks every shape
+for CPU-only CI runners.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import pipeline as pipe
 from repro.core import walks as wl
 from repro.kernels import ops, ref
 
@@ -28,7 +38,69 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main():
+def rerank_bench(smoke: bool = False, json_out: str = "BENCH_rerank.json"):
+    """Rerank-stage shootout; returns the result dict and writes ``json_out``.
+
+    All three variants consume the RAW (non-deduplicated) candidate gather,
+    i.e. each timing includes that path's duplicate-suppression cost — that
+    is the pipeline-level comparison (dedup is part of the rerank contract).
+    """
+    if smoke:
+        cfg = dict(n=1500, m=32, q=8, ctot=512, k=10, chunk=128, reps=3)
+    else:
+        cfg = dict(n=20000, m=64, q=32, ctot=4096, k=50, chunk=256, reps=5)
+    rng = np.random.default_rng(0)
+    n, m, q, ctot, k, chunk = (cfg[x] for x in
+                               ("n", "m", "q", "ctot", "k", "chunk"))
+    dataset = jnp.asarray(rng.integers(0, 200, (n, m)).astype(np.int32))
+    queries = jnp.asarray(rng.integers(0, 200, (q, m)).astype(np.int32))
+    # probe-shaped candidates: clustered ids with duplicates + ~10% sentinel
+    ids_np = rng.integers(0, n, (q, ctot)).astype(np.int32)
+    ids_np[rng.random((q, ctot)) < 0.1] = n
+    ids = jnp.asarray(ids_np)
+
+    @jax.jit
+    def scan_path(ds, qs, cand):   # legacy: sort-dedup + chunked scan+top_k
+        return pipe.l1_distance_chunked(
+            ds, qs, pipe.stage_dedup(cand, n), k, chunk)
+
+    @jax.jit
+    def fused_path(ds, qs, cand):  # fused kernel path (xla executor on CPU)
+        return ops.fused_rerank(ds, qs, cand, k, chunk=chunk)
+
+    @jax.jit
+    def naive_path(ds, qs, cand):  # full (Q, Ctot, m) materialize + sort
+        return ref.fused_rerank(ds, qs, cand, k)
+
+    variants = {"scan_topk": scan_path, "fused": fused_path,
+                "naive": naive_path}
+    us, outs = {}, {}
+    for name, fn in variants.items():
+        us[name] = _time(fn, dataset, queries, ids, reps=cfg["reps"])
+        outs[name] = tuple(np.asarray(x) for x in fn(dataset, queries, ids))
+    for name in ("fused", "naive"):   # all paths must agree bit-for-bit
+        np.testing.assert_array_equal(outs["scan_topk"][0], outs[name][0])
+        np.testing.assert_array_equal(outs["scan_topk"][1], outs[name][1])
+    result = {
+        "bench": "rerank_stage",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "config": {x: cfg[x] for x in ("n", "m", "q", "ctot", "k", "chunk")},
+        "us_per_call": {name: round(v, 1) for name, v in us.items()},
+        "fused_speedup_vs_scan": round(us["scan_topk"] / us["fused"], 3),
+        "fused_speedup_vs_naive": round(us["naive"] / us["fused"], 3),
+        "outputs_bit_identical": True,
+    }
+    with open(json_out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"rerank_stage: fused {us['fused']:.0f}us  "
+          f"scan+top_k {us['scan_topk']:.0f}us  naive {us['naive']:.0f}us  "
+          f"-> {result['fused_speedup_vs_scan']:.2f}x vs scan "
+          f"({json_out})")
+    return result
+
+
+def main(smoke: bool = False, rerank_json: str = "BENCH_rerank.json"):
     rng = np.random.default_rng(0)
     rows = []
 
@@ -59,6 +131,13 @@ def main():
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")
 
+    rerank_bench(smoke=smoke, json_out=rerank_json)
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CPU-only CI runners")
+    ap.add_argument("--rerank-json", default="BENCH_rerank.json")
+    args = ap.parse_args()
+    main(smoke=args.smoke, rerank_json=args.rerank_json)

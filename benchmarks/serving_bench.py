@@ -1,0 +1,100 @@
+"""Serving-engine shape-bucket benchmark (ISSUE 2 acceptance).
+
+Streams mixed batch sizes through ``AnnServingEngine`` and demonstrates the
+shape-bucket policy (DESIGN.md §Perf): after ``warmup()`` compiles every
+power-of-two bucket, live traffic with arbitrary batch sizes triggers
+**zero recompiles** (``bucket_cold_hits`` stays 0), and small batches stop
+paying full-batch padding FLOPs.  The legacy pad-to-batch_size policy is
+measured side by side.  Emits machine-readable ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core.index import IndexConfig
+from repro.data import ann_synthetic as ds
+from repro.serve.engine import AnnServingEngine, ServeConfig
+
+
+def run_engine(cfg, serve_cfg, data, bursts):
+    t0 = time.perf_counter()
+    engine = AnnServingEngine(cfg, serve_cfg, data)
+    init_ms = (time.perf_counter() - t0) * 1e3
+    cold_after_warmup = engine.stats["bucket_cold_hits"]
+    rng = np.random.default_rng(7)
+    dim = data.shape[1]
+    t0 = time.perf_counter()
+    for burst in bursts:
+        engine.submit((rng.integers(0, 32, (burst, dim)) * 2).astype(np.int32))
+        engine.drain()
+    serve_ms = (time.perf_counter() - t0) * 1e3
+    s = engine.summary()
+    return {
+        "init_ms": round(init_ms, 1),
+        "warmup_ms": round(s["warmup_ms"], 1),
+        "serve_ms": round(serve_ms, 1),
+        "buckets": s["buckets"],
+        "batches": s["batches"],
+        "recompiles_after_warmup": s["bucket_cold_hits"] - cold_after_warmup,
+        "p50_batch_ms": round(s["p50_batch_ms"], 3),
+        "p99_batch_ms": round(s["p99_batch_ms"], 3),
+        "queries_per_s": round(s["queries_per_s"], 1),
+    }
+
+
+def main(smoke: bool = False, json_out: str = "BENCH_serving.json"):
+    if smoke:
+        spec = ds.DatasetSpec("srv", n=1500, dim=16, universe=64,
+                              num_clusters=6)
+        cfg = IndexConfig(num_tables=4, num_hashes=8, width=24, num_probes=20,
+                          candidate_cap=16, universe=64, k=8, rerank_chunk=128)
+        batch, rounds = 32, 2
+    else:
+        spec = ds.DatasetSpec("srv", n=20000, dim=32, universe=64,
+                              num_clusters=16)
+        cfg = IndexConfig(num_tables=6, num_hashes=10, width=32, num_probes=50,
+                          candidate_cap=32, universe=64, k=10,
+                          rerank_chunk=512)
+        batch, rounds = 64, 4
+    data = np.asarray(ds.make_dataset(spec))
+    # mixed live traffic: every size class appears, repeated across rounds
+    rng = np.random.default_rng(0)
+    sizes = [1, 3, 7, 8, 13, 17, batch // 2, batch - 1, batch]
+    bursts = [int(s) for _ in range(rounds) for s in rng.permutation(sizes)]
+
+    result = {
+        "bench": "serving_shape_buckets",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "config": {"n": spec.n, "dim": spec.dim, "batch_size": batch,
+                   "bursts": len(bursts)},
+        "bucketed": run_engine(
+            cfg, ServeConfig(batch_size=batch, delta_cap=256,
+                             shape_buckets=True), data, bursts),
+        "legacy_fixed": run_engine(
+            cfg, ServeConfig(batch_size=batch, delta_cap=256,
+                             shape_buckets=False), data, bursts),
+    }
+    ok = result["bucketed"]["recompiles_after_warmup"] == 0
+    result["zero_recompiles_after_warmup"] = ok
+    with open(json_out, "w") as f:
+        json.dump(result, f, indent=1)
+    b, l = result["bucketed"], result["legacy_fixed"]
+    print(f"serving buckets={b['buckets']} recompiles_after_warmup="
+          f"{b['recompiles_after_warmup']} p50={b['p50_batch_ms']}ms "
+          f"(legacy p50={l['p50_batch_ms']}ms) -> {json_out}")
+    if not ok:
+        raise SystemExit("shape buckets recompiled after warm-up")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json-out", default="BENCH_serving.json")
+    main(**vars(ap.parse_args()))

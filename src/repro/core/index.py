@@ -45,6 +45,7 @@ class IndexConfig:
     family: str = "rw"           # 'rw' | 'cauchy' | 'gaussian'
     hash_impl: str = "gather"    # 'gather' | 'thermo' | 'pallas'
     rerank_chunk: int = 512      # candidates per rerank scan step
+    rerank_impl: str = "fused"   # 'fused' (kernel, sort-free dedup) | 'scan'
     k: int = 50                  # neighbors returned
     dataset_dtype: str = "int32" # 'int16' halves rerank-gather bytes when
                                  # universe < 32768 (EXPERIMENTS.md §Perf C1)
@@ -152,17 +153,21 @@ def build_index(
 def _probe_candidate_ids(cfg: IndexConfig, state: IndexState, queries: jax.Array):
     """Multi-probe -> candidate local row ids (pipeline stages 1-5).
 
-    returns ids (Q, L*P*C) int32 (sentinel n for invalid) — deduplicated.
+    returns ids (Q, L*P*C) int32 (sentinel n for invalid) — always
+    deduplicated (debug/test helper; the query path lets the fused rerank
+    kernel dedup instead, see ``pipeline.rerank_handles_duplicates``).
     """
     return pipe.probe_candidates(
         cfg, state.params, state.template, state.sorted_keys,
-        state.sorted_ids, state.dataset.shape[0], queries)
+        state.sorted_ids, state.dataset.shape[0], queries, dedup=True)
 
 
 @partial(jax.jit, static_argnums=0)
 def query_index(cfg: IndexConfig, state: IndexState, queries: jax.Array):
     """Batched ANN query.  Returns (dists (Q,k) int32, global_ids (Q,k) int32)."""
-    ids = _probe_candidate_ids(cfg, state, queries)
+    ids = pipe.probe_candidates(
+        cfg, state.params, state.template, state.sorted_keys,
+        state.sorted_ids, state.dataset.shape[0], queries)
     d, i = pipe.stage_rerank(cfg, state.dataset, queries, ids)
     gid = jnp.where(i >= 0, i + state.row_offset, -1)
     return d, gid

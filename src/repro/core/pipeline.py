@@ -23,9 +23,16 @@ Stage contracts (Q queries, L tables, M hashes, P probes/table, C cap):
   stage_merge_pair : two (Q, k) ascending lists -> one (Q, k) ascending list
   stage_merge_concat : (Q, R*k) stacked lists  -> (Q, k)
 
-The composition ``probe_candidates`` + ``stage_rerank`` is bit-identical to
-the pre-refactor monolithic ``query_index`` (tests/test_segments.py proves
-it against a frozen copy of the seed implementation).
+Rerank dispatch (DESIGN.md §Perf): ``cfg.rerank_impl`` selects between the
+fused gather+L1+running-top-k kernel (``kernels/fused_rerank``, the default)
+and the legacy chunked scan + ``lax.top_k`` (``l1_distance_chunked``).  The
+fused kernel suppresses duplicate candidate ids itself via id-keyed masking,
+so ``probe_candidates`` skips the sorting dedup stage entirely on that path
+(sort-free dedup).  Both paths produce bit-identical results — the k
+lexicographically-(dist, id)-smallest unique candidates — which is also
+exactly what the pre-refactor monolithic ``query_index`` computed
+(tests/test_segments.py proves it against a frozen copy of the seed
+implementation; tests/test_fused_rerank.py pins the kernel executors).
 """
 from __future__ import annotations
 
@@ -34,6 +41,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import ops as kops
 
 from . import hashes as hashes_lib
 from . import multiprobe as mp_lib
@@ -47,6 +56,7 @@ __all__ = [
     "stage_dedup",
     "stage_tombstone",
     "probe_candidates",
+    "rerank_handles_duplicates",
     "stage_rerank",
     "stage_merge_pair",
     "stage_merge_concat",
@@ -114,11 +124,24 @@ def stage_candidate_gather(
     return jnp.where(valid, ids, n).reshape(q, l * p * c)
 
 
+def rerank_handles_duplicates(cfg) -> bool:
+    """True when ``stage_rerank``'s implementation suppresses duplicates.
+
+    The fused rerank kernel dedups via id-keyed masking (DESIGN.md §Perf),
+    so the pipeline's sorting ``stage_dedup`` becomes redundant work and
+    ``probe_candidates`` skips it (the sort-free dedup path).  Only the
+    legacy ``scan`` impl still needs the pre-sort.
+    """
+    return getattr(cfg, "rerank_impl", "fused") != "scan"
+
+
 def stage_dedup(ids: jax.Array, n: int) -> jax.Array:
     """Sort ascending; equal-adjacent -> sentinel n.
 
     Guarantees no candidate is reranked twice even when it falls in several
     tables/probes (sentinel slots sort to the tail and stay sentinel).
+    Skipped when the fused rerank kernel dedups internally — see
+    ``rerank_handles_duplicates``.
     """
     q = ids.shape[0]
     ids = jnp.sort(ids, axis=-1)
@@ -147,17 +170,22 @@ def stage_tombstone(
 def probe_candidates(
     cfg, params: hashes_lib.LshParams, template: jax.Array,
     sorted_keys: jax.Array, sorted_ids: jax.Array, n: int,
-    queries: jax.Array,
+    queries: jax.Array, dedup: Optional[bool] = None,
 ) -> jax.Array:
-    """hash -> probe-gen -> bucket-lookup -> gather -> dedup, composed.
+    """hash -> probe-gen -> bucket-lookup -> gather [-> dedup], composed.
 
-    Returns deduplicated candidate local ids (Q, L*P*C), sentinel n.
+    Returns candidate local ids (Q, L*P*C), sentinel n.  ``dedup`` defaults
+    to cfg-driven: the sorting dedup only runs when the configured rerank
+    impl does not dedup internally (``rerank_handles_duplicates``); the
+    fused path consumes the raw gather and masks duplicates in-kernel.
     """
     bucket, x_neg = stage_hash(cfg, params, queries)
     probe_keys = stage_probe_keys(cfg, params, template, bucket, x_neg)
     lo, hi = stage_bucket_lookup(sorted_keys, probe_keys)
     ids = stage_candidate_gather(cfg, sorted_ids, lo, hi, n)
-    return stage_dedup(ids, n)
+    if dedup is None:
+        dedup = not rerank_handles_duplicates(cfg)
+    return stage_dedup(ids, n) if dedup else ids
 
 
 # --------------------------------------------------------------------------
@@ -166,13 +194,19 @@ def probe_candidates(
 
 def l1_distance_chunked(
     dataset: jax.Array, queries: jax.Array, ids: jax.Array, k: int,
-    chunk: int, use_kernel: bool = False,
+    chunk: int,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Exact L1 rerank of gathered candidates with a running top-k.
+    """Legacy exact L1 rerank: chunked scan with a ``lax.top_k`` running best.
 
     dataset (n, m) int; queries (Q, m) int; ids (Q, Ctot) int32 with sentinel
-    n marking invalid.  Returns (dists (Q,k) int32, ids (Q,k) int32) sorted
-    ascending; invalid entries have dist = INT32_MAX/2 and id = -1.
+    n marking invalid, **deduplicated** (duplicates would each take a top-k
+    slot here — feed it ``stage_dedup`` output).  Returns (dists (Q,k) int32,
+    ids (Q,k) int32) sorted ascending; invalid entries have dist =
+    INT32_MAX/2 and id = -1.
+
+    Kept as the `scan` rerank impl and as the benchmark baseline; the fused
+    kernel path (DESIGN.md §Perf) avoids this function's per-chunk HBM
+    round-trips and repeated top_k.
     """
     n = dataset.shape[0]
     q, ctot = ids.shape
@@ -183,20 +217,14 @@ def l1_distance_chunked(
     steps = ids.shape[1] // chunk
     ids_steps = ids.reshape(q, steps, chunk).transpose(1, 0, 2)     # (S,Q,c)
 
-    if use_kernel:
-        from repro.kernels import ops as kops
-
     def body(carry, step_ids):
         best_d, best_i = carry                                      # (Q,k)
         sl = jnp.clip(step_ids, 0, n - 1)                           # (Q,c)
         rows = dataset[sl]                                          # (Q,c,m)
-        if use_kernel:
-            d = kops.l1_distance_rows(queries, rows)                # (Q,c)
-        else:
-            # HBM gather stays at dataset dtype (int16 under §Perf C1);
-            # the |diff| accumulation is widened to int32 in registers.
-            diff = rows.astype(jnp.int32) - queries[:, None, :].astype(jnp.int32)
-            d = jnp.abs(diff).sum(axis=-1).astype(jnp.int32)
+        # HBM gather stays at dataset dtype (int16 under §Perf C1);
+        # the |diff| accumulation is widened to int32 in registers.
+        diff = rows.astype(jnp.int32) - queries[:, None, :].astype(jnp.int32)
+        d = jnp.abs(diff).sum(axis=-1).astype(jnp.int32)
         d = jnp.where(step_ids >= n, big, d)
         cd = jnp.concatenate([best_d, d], axis=-1)
         ci = jnp.concatenate([best_i, step_ids], axis=-1)
@@ -211,13 +239,24 @@ def l1_distance_chunked(
 
 def stage_rerank(
     cfg, dataset: jax.Array, queries: jax.Array, ids: jax.Array,
-    use_kernel: Optional[bool] = None,
+    impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Exact-rerank stage; kernel choice defaults to the cfg's hash impl."""
-    if use_kernel is None:
-        use_kernel = cfg.hash_impl == "pallas"
-    return l1_distance_chunked(
-        dataset, queries, ids, cfg.k, cfg.rerank_chunk, use_kernel=use_kernel)
+    """Exact-rerank stage; dispatches on ``cfg.rerank_impl``.
+
+    'fused' (default): the fused gather+L1+running-top-k kernel — dedups
+    internally, so it accepts the raw (non-deduplicated) candidate gather.
+    'scan': the legacy chunked scan + lax.top_k — requires deduplicated ids.
+    Both return identical bits (the k lex-(dist, id)-smallest unique
+    candidates, ascending; invalid -> (BIG_DIST, -1)).
+    """
+    impl = impl or getattr(cfg, "rerank_impl", "fused")
+    if impl == "scan":
+        return l1_distance_chunked(
+            dataset, queries, ids, cfg.k, cfg.rerank_chunk)
+    if impl != "fused":
+        raise ValueError(f"unknown rerank_impl: {impl!r}")
+    return kops.fused_rerank(
+        dataset, queries, ids, cfg.k, chunk=cfg.rerank_chunk)
 
 
 def stage_merge_pair(
@@ -228,16 +267,15 @@ def stage_merge_pair(
 
     Invalid entries must carry dist >= BIG_DIST (id -1 or sentinel).  With
     ``use_kernel`` the bitonic Pallas ``topk_merge`` runs (the same kernel
-    the distributed ring merge uses); the fallback is concat + lax.top_k.
+    the distributed ring merge uses); the fallback is a lexicographic
+    concat sort.  Both backends tie-break on (dist, id), so they return
+    identical ids even on tied distances.
     """
     if use_kernel:
-        from repro.kernels import ops as kops
         return kops.topk_merge(da, ia, db, ib)
-    k = da.shape[-1]
-    cd = jnp.concatenate([da, db], axis=-1)
-    ci = jnp.concatenate([ia, ib], axis=-1)
-    nd, sel = jax.lax.top_k(-cd, k)
-    return -nd, jnp.take_along_axis(ci, sel, axis=-1)
+    return stage_merge_concat(jnp.concatenate([da, db], axis=-1),
+                              jnp.concatenate([ia, ib], axis=-1),
+                              da.shape[-1])
 
 
 def stage_merge_concat(
@@ -246,6 +284,12 @@ def stage_merge_concat(
     """Merge R stacked top-k lists at once: (Q, R*k) -> (Q, k) ascending.
 
     The all-gather distributed merge and any >2-way host merge use this.
+    Lexicographic on (dist, id) like every other merge/rerank path, so the
+    allgather and ring/tree distributed merges agree bit-for-bit on ids
+    even when distances tie.
     """
-    nd, sel = jax.lax.top_k(-ds, k)
-    return -nd, jnp.take_along_axis(is_, sel, axis=-1)
+    # Variadic 2-key sort is the slow comparator path on XLA CPU, but R*k
+    # rows are tiny (<= ~1k) and ids here are arbitrary gids, which rules
+    # out the int32 (dist, position) key packing fused_rerank_xla uses.
+    sd, si = jax.lax.sort((ds, is_), dimension=-1, num_keys=2)
+    return sd[:, :k], si[:, :k]

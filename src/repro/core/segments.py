@@ -63,7 +63,15 @@ class Segment:
 @partial(jax.jit, static_argnums=0)
 def _query_segment(cfg: IndexConfig, state: IndexState, gids: jax.Array,
                    tombstones: jax.Array, queries: jax.Array):
-    """Full pipeline over one segment: probe -> tombstone -> rerank -> gid."""
+    """Full pipeline over one segment: probe -> tombstone -> rerank -> gid.
+
+    Under the default ``cfg.rerank_impl='fused'`` the candidate list is NOT
+    pre-deduplicated (``probe_candidates`` skips the sorting dedup; the
+    fused rerank kernel masks duplicates in-kernel — DESIGN.md §Perf).
+    Local-to-gid mapping is monotone (gids ascend with local rows in every
+    segment), so the per-segment top-k stays lex-(dist, gid) ascending —
+    the invariant the bitonic ``topk_merge`` fold relies on.
+    """
     n = state.dataset.shape[0]
     ids = pipe.probe_candidates(
         cfg, state.params, state.template, state.sorted_keys,
@@ -300,6 +308,20 @@ class SegmentedIndex:
                                  fingerprint=self.fingerprint)]
 
     # -- query ------------------------------------------------------------
+
+    def structure_signature(self) -> tuple:
+        """Shapes the jitted query path specializes on, besides the batch.
+
+        (per-segment sizes, delta-scan active, tombstone-array capacity) —
+        the serving engine keys its compiled-executable bookkeeping on this
+        (DESIGN.md §Perf).  Owned here so the tombstone pow2 padding policy
+        (``_tombstone_array``) and the delta-scan condition (``query``) stay
+        in one module.
+        """
+        tomb = len(self._tombstones)
+        tomb_cap = 1 << (tomb - 1).bit_length() if tomb else 1
+        return (tuple(s.size for s in self.segments),
+                self._delta_count > 0 or not self.segments, tomb_cap)
 
     def _tombstone_array(self) -> jax.Array:
         """Ascending device array padded to a power of two with INT32_MAX.

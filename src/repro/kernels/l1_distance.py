@@ -6,6 +6,11 @@ residency: stream (bq, bm) query tiles against (bn, bm) point tiles and
 accumulate partial sums over the m-grid axis, never touching HBM for the
 (bq, bn, bm) intermediate.
 
+These kernels serve the brute-force/baseline paths; the *rerank stage*
+itself now runs the fused gather+L1+running-top-k kernel
+(``kernels/fused_rerank.py``, DESIGN.md §Perf), which never materializes
+the candidate distance matrix at all.
+
 Tiling defaults (v5e, 128-lane VPU):
   bq=8 (sublane), bn=128 (lane), bm=512 -> intermediate 8*128*512*4B = 2 MB VMEM.
 """
@@ -22,6 +27,16 @@ __all__ = ["l1_distance_pallas", "l1_distance_rows_pallas"]
 
 def _acc_dtype(dtype):
     return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def _m_tile(bm: int, m: int) -> int:
+    """Clamp the m-tile to the (padded) feature dim, lane-aligned.
+
+    A plain ``min(bm, max(128, m))`` can yield a non-lane-multiple tile
+    (e.g. m=300 -> bm=300), forcing bad VMEM layouts — round the clamped
+    tile up to a multiple of 128 and pad m accordingly at the call site.
+    """
+    return -(-min(bm, max(128, m)) // 128) * 128
 
 
 def _l1_kernel(q_ref, x_ref, o_ref):
@@ -48,7 +63,7 @@ def l1_distance_pallas(
     """(Q, m), (N, m) -> (Q, N).  Pads every axis to tile multiples."""
     qn, m = queries.shape
     n = points.shape[0]
-    bm = min(bm, max(128, m))
+    bm = _m_tile(bm, m)
     pq, pn, pm = (-qn) % bq, (-n) % bn, (-m) % bm
     qp = jnp.pad(queries, ((0, pq), (0, pm)))
     xp = jnp.pad(points, ((0, pn), (0, pm)))
@@ -92,7 +107,7 @@ def l1_distance_rows_pallas(
     """(Q, m), (Q, C, m) -> (Q, C) per-query candidate distances."""
     qn, m = queries.shape
     c = rows.shape[1]
-    bm = min(bm, max(128, m))
+    bm = _m_tile(bm, m)
     pq, pm = (-qn) % bq, (-m) % bm
     qp = jnp.pad(queries, ((0, pq), (0, pm)))
     xp = jnp.pad(rows, ((0, pq), (0, 0), (0, pm)))

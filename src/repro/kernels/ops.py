@@ -11,11 +11,13 @@ import os
 
 import jax
 
+from .fused_rerank import fused_rerank_pallas, fused_rerank_xla
 from .l1_distance import l1_distance_pallas, l1_distance_rows_pallas
 from .rw_hash import rw_hash_pallas
 from .topk_merge import topk_merge_pallas
 
-__all__ = ["l1_distance", "l1_distance_rows", "rw_hash", "topk_merge", "use_interpret"]
+__all__ = ["l1_distance", "l1_distance_rows", "rw_hash", "topk_merge",
+           "fused_rerank", "use_interpret"]
 
 
 def use_interpret() -> bool:
@@ -39,3 +41,22 @@ def rw_hash(pairs, points, **kw):
 
 def topk_merge(da, ia, db, ib, **kw):
     return topk_merge_pallas(da, ia, db, ib, interpret=use_interpret(), **kw)
+
+
+def fused_rerank(dataset, queries, ids, k, chunk=512, **kw):
+    """Fused gather+L1+running-top-k rerank (DESIGN.md §Perf).
+
+    Executor choice differs from the other wrappers: the Mosaic kernel's
+    per-query-tile candidate loop is too deep to run interpreted in the hot
+    path, so non-TPU backends get the bit-identical XLA executor instead
+    (chunked scan + one lexicographic sort).  Force a specific executor with
+    ``REPRO_RERANK_EXECUTOR=pallas|xla`` (parity tests pin pallas-interpret
+    against the XLA executor and the jnp oracle).
+    """
+    executor = os.environ.get("REPRO_RERANK_EXECUTOR")
+    if executor is None:
+        executor = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if executor == "pallas":
+        return fused_rerank_pallas(dataset, queries, ids, k,
+                                   interpret=use_interpret(), **kw)
+    return fused_rerank_xla(dataset, queries, ids, k, chunk=chunk)

@@ -8,7 +8,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["l1_distance", "l1_distance_rows", "rw_hash", "topk_merge"]
+__all__ = ["l1_distance", "l1_distance_rows", "rw_hash", "topk_merge",
+           "fused_rerank"]
+
+_BIG = (2 ** 31 - 1) // 2  # == iinfo(int32).max // 2, pipeline.BIG_DIST
 
 
 def l1_distance(queries: jax.Array, points: jax.Array) -> jax.Array:
@@ -43,15 +46,54 @@ def rw_hash(pairs: jax.Array, points: jax.Array) -> jax.Array:
     ).astype(jnp.int32)
 
 
+def fused_rerank(dataset: jax.Array, queries: jax.Array, ids: jax.Array,
+                 k: int):
+    """Semantic ground truth for the fused rerank kernel (§Perf).
+
+    Returns the k lexicographically-(dist, id)-smallest pairs over the
+    *unique* valid candidate ids (slots < 0 or >= n invalid), ascending;
+    invalid slots carry (INT32_MAX // 2, -1).  This is also exactly what the
+    legacy sort-dedup + chunked-scan + lax.top_k path computes (duplicates
+    tie with themselves, and top_k's positional tie-break over an
+    id-ascending candidate list is the (dist, id) order).
+    """
+    n = dataset.shape[0]
+    q = ids.shape[0]
+    big = jnp.int32(_BIG)
+    if n == 0 or ids.shape[1] == 0:
+        return (jnp.full((q, k), big, jnp.int32),
+                jnp.full((q, k), -1, jnp.int32))
+    valid = (ids >= 0) & (ids < n)
+    rows = dataset[jnp.clip(ids, 0, n - 1)]
+    d = jnp.abs(rows.astype(jnp.int32)
+                - queries[:, None, :].astype(jnp.int32)).sum(-1)
+    d = jnp.where(valid, d, big)
+    i = jnp.where(valid, ids, -1)
+    sd, si = jax.lax.sort((d, i), dimension=-1, num_keys=2)
+    dup = jnp.concatenate(
+        [jnp.zeros((q, 1), bool),
+         (sd[:, 1:] == sd[:, :-1]) & (si[:, 1:] == si[:, :-1])], axis=-1)
+    sd = jnp.where(dup, big, sd)
+    si = jnp.where(dup, -1, si)
+    sd, si = jax.lax.sort((sd, si), dimension=-1, num_keys=2)
+    pad = max(0, k - sd.shape[1])
+    if pad:
+        sd = jnp.pad(sd, ((0, 0), (0, pad)), constant_values=_BIG)
+        si = jnp.pad(si, ((0, 0), (0, pad)), constant_values=-1)
+    sd, si = sd[:, :k], si[:, :k]
+    return sd, jnp.where(sd >= big, -1, si)
+
+
 def topk_merge(da: jax.Array, ia: jax.Array, db: jax.Array, ib: jax.Array):
     """Merge two per-row ascending top-k lists into one ascending top-k.
 
     da, db : (Q, k) distances sorted ascending; ia, ib: matching ids.
-    Returns (d, i) of the k smallest of the union, ascending.
+    Returns (d, i) of the k smallest of the union, ascending —
+    lexicographic on (dist, id) like the Pallas kernel, so ties resolve
+    identically on every backend.
     """
     k = da.shape[-1]
     d = jnp.concatenate([da, db], axis=-1)
     i = jnp.concatenate([ia, ib], axis=-1)
-    order = jnp.argsort(d, axis=-1, stable=True)
-    return (jnp.take_along_axis(d, order, axis=-1)[..., :k],
-            jnp.take_along_axis(i, order, axis=-1)[..., :k])
+    sd, si = jax.lax.sort((d, i), dimension=-1, num_keys=2)
+    return sd[..., :k], si[..., :k]

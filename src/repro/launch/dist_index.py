@@ -106,6 +106,9 @@ def dist_query_fn(cfg: IndexConfig, mesh: Mesh, merge: str = "allgather"):
                     params, template, queries):
         # Same staged pipeline as the single-shard path, applied to the
         # shard's raw slices (no IndexState round-trip inside shard_map).
+        # stage_rerank dispatches per cfg.rerank_impl (fused kernel by
+        # default, DESIGN.md §Perf); adding row_offset preserves the
+        # lex-(dist, id) ascending order the ring/tree merges require.
         n = dataset.shape[0]
         ids = pipe.probe_candidates(
             cfg, params, template, sorted_keys, sorted_ids, n, queries)

@@ -1,8 +1,13 @@
 """Batched ANN serving engine (the paper's system as a service).
 
 Production posture on a single process:
-  * request queue -> fixed-size batches (padded to the compiled batch shape,
-    so one XLA program serves any load level);
+  * request queue -> **shape-bucketed** batches (DESIGN.md §Perf): a batch of
+    Q live requests is padded up to the smallest power-of-two bucket in
+    [bucket_min, batch_size] instead of always to batch_size.  Each bucket
+    shape compiles once (jit's executable cache is keyed on shapes); the
+    engine warms every bucket at startup and tracks cold-bucket hits, so
+    mixed live traffic triggers **zero recompiles after warm-up** while
+    small batches stop paying full-batch padding FLOPs;
   * a **mutable segmented index** (core.segments): ``insert``/``delete``
     endpoints mutate the delta buffer / tombstone set without a rebuild,
     and a compaction pass — triggered by the delta-buffer watermark or by
@@ -39,7 +44,10 @@ __all__ = ["ServeConfig", "AnnServingEngine"]
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    batch_size: int = 64
+    batch_size: int = 64           # max queries per dispatch (largest bucket)
+    bucket_min: int = 8            # smallest padded batch shape
+    shape_buckets: bool = True     # pow2 buckets; False = always pad to batch_size
+    warm_buckets: bool = True      # pre-compile every bucket at startup
     hedge_ms: float = 50.0
     max_wait_ms: float = 2.0
     delta_cap: int = 1024          # delta-buffer capacity (points)
@@ -61,11 +69,60 @@ class AnnServingEngine:
         self._dim = dataset.shape[1]
         self._pending: List[np.ndarray] = []
         self.stats = {"batches": 0, "queries": 0, "hedges": 0,
-                      "inserts": 0, "deletes": 0,
-                      "compact_ms": 0.0, "total_ms": 0.0, "batch_ms": []}
-        # warm the compiled path
-        warm = jnp.zeros((serve_cfg.batch_size, self._dim), jnp.int32)
-        self.index.query(warm)[0].block_until_ready()
+                      "inserts": 0, "deletes": 0, "bucket_cold_hits": 0,
+                      "compact_ms": 0.0, "warmup_ms": 0.0, "total_ms": 0.0,
+                      "batch_ms": []}
+        # (bucket, index-structure signature) pairs already compiled; a
+        # query against a missing pair implies an XLA compile (cold hit)
+        self._warm: set = set()
+        if serve_cfg.warm_buckets:
+            self.warmup()
+
+    # -- shape buckets -----------------------------------------------------
+
+    def buckets(self) -> List[int]:
+        """Padded batch shapes the engine dispatches: pow2 up to batch_size."""
+        if not self.serve_cfg.shape_buckets:
+            return [self.serve_cfg.batch_size]
+        out, b = [], max(1, self.serve_cfg.bucket_min)
+        while b < self.serve_cfg.batch_size:
+            out.append(b)
+            b *= 2
+        out.append(self.serve_cfg.batch_size)
+        return out
+
+    def _bucket_for(self, q: int) -> int:
+        for b in self.buckets():
+            if q <= b:
+                return b
+        return self.serve_cfg.batch_size
+
+    def _index_signature(self) -> tuple:
+        """Shapes the jitted query path specializes on besides the batch.
+
+        A new segment size, delta activation, or tombstone-array growth
+        compiles fresh executables even for a warm bucket; tracking it keeps
+        the cold-hit counter honest across mutations.  The formula lives on
+        the index (``SegmentedIndex.structure_signature``) so it cannot
+        drift from the actual padding policy.
+        """
+        return self.index.structure_signature()
+
+    def warmup(self) -> None:
+        """Compile every bucket shape against the current index structure.
+
+        After this, mixed live batch sizes hit cached executables only
+        (``stats['bucket_cold_hits']`` stays flat) — recompile-free serving.
+        """
+        t0 = time.perf_counter()
+        sig = self._index_signature()
+        for b in self.buckets():
+            if (b, sig) in self._warm:
+                continue
+            warm = jnp.zeros((b, self._dim), jnp.int32)
+            self.index.query(warm)[0].block_until_ready()
+            self._warm.add((b, sig))
+        self.stats["warmup_ms"] += (time.perf_counter() - t0) * 1e3
 
     @property
     def state(self) -> IndexState:
@@ -142,12 +199,12 @@ class AnnServingEngine:
     def _next_batch(self) -> Optional[Tuple[np.ndarray, int]]:
         if not self._pending:
             return None
-        bs = self.serve_cfg.batch_size
-        take = self._pending[:bs]
-        self._pending = self._pending[bs:]
+        take = self._pending[:self.serve_cfg.batch_size]
+        self._pending = self._pending[len(take):]
         batch = np.stack(take)
-        if batch.shape[0] < bs:  # pad to the compiled shape
-            pad = np.zeros((bs - batch.shape[0], self._dim), np.int32)
+        bucket = self._bucket_for(len(take))
+        if batch.shape[0] < bucket:  # pad to the bucket's compiled shape
+            pad = np.zeros((bucket - batch.shape[0], self._dim), np.int32)
             batch = np.concatenate([batch, pad])
         return batch, len(take)
 
@@ -159,6 +216,10 @@ class AnnServingEngine:
             if nb is None:
                 break
             batch, n_real = nb
+            key = (batch.shape[0], self._index_signature())
+            if key not in self._warm:
+                self.stats["bucket_cold_hits"] += 1
+                self._warm.add(key)
             t0 = time.perf_counter()
             d, i = self.index.query(jnp.asarray(batch))
             d.block_until_ready()
@@ -190,6 +251,9 @@ class AnnServingEngine:
             "compactions": self.index.compactions,
             "segments": self.index.num_segments,
             "delta_fill": round(self.index.delta_fill, 4),
+            "buckets": self.buckets(),
+            "bucket_cold_hits": self.stats["bucket_cold_hits"],
+            "warmup_ms": self.stats["warmup_ms"],
             "mean_batch_ms": float(lat.mean()),
             # quantiles over per-batch latencies (interpolated, not an
             # index into the batch list as if samples were per-query)
