@@ -99,10 +99,31 @@ def query_srs(state: SrsState, queries: jax.Array, t: int, k: int):
 # --------------------------------------------------------------------------
 
 def recall(result_ids: np.ndarray, true_ids: np.ndarray) -> float:
-    """|R ∩ R*| / |R| averaged over queries."""
+    """Recall@k: |R ∩ R*| / |R*| averaged over queries (paper Sect. 5.1).
+
+    The denominator is the ground-truth set R* — the exact k-NN ids — which
+    is what the paper reports (a padded or truncated result row must not be
+    able to inflate its own score).  Robust to ragged inputs: ``-1``/negative
+    padding is dropped from both rows, duplicate ids count once (set
+    semantics), result rows may carry more or fewer than |R*| entries, and
+    degenerate inputs (no queries, or an all-padding truth row) score 0
+    instead of dividing by zero.
+    """
+    result_ids = np.atleast_2d(np.asarray(result_ids))
+    true_ids = np.atleast_2d(np.asarray(true_ids))
+    if result_ids.shape[0] != true_ids.shape[0]:
+        # zip would silently truncate and the mean would quietly use the
+        # wrong query count — a caller bug, not a raggedness to absorb.
+        raise ValueError(
+            f"row count mismatch: {result_ids.shape[0]} result rows vs "
+            f"{true_ids.shape[0]} ground-truth rows")
+    if result_ids.shape[0] == 0:
+        return 0.0
     r = 0.0
     for a, b in zip(result_ids, true_ids):
-        r += len(set(a[a >= 0].tolist()) & set(b.tolist())) / len(b)
+        truth = set(b[b >= 0].tolist())
+        if truth:
+            r += len(set(a[a >= 0].tolist()) & truth) / len(truth)
     return r / len(result_ids)
 
 

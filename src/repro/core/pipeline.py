@@ -112,6 +112,12 @@ def stage_candidate_gather(
     """
     q = lo.shape[0]
     l, p, c = cfg.num_tables, cfg.probes_per_table, cfg.candidate_cap
+    if n == 0:
+        # Zero-point shard (e.g. a segment compacted down to nothing, or an
+        # empty seed): clip(slots, 0, n-1) is ill-formed and the id gather
+        # would read a zero-length array.  Every slot is invalid, and the
+        # sentinel for n=0 is 0 itself.
+        return jnp.zeros((q, l * p * c), jnp.int32)
     slots = lo[..., None] + jnp.arange(c, dtype=lo.dtype)       # (Q,L,P,C)
     valid = slots < jnp.minimum(hi, lo + c)[..., None]
     slots = jnp.clip(slots, 0, n - 1)
@@ -161,6 +167,8 @@ def stage_tombstone(
                  (the pad value matches no real gid, so no count is needed).
     Applied *before* rerank so a deleted point can never occupy a top-k slot.
     """
+    if n == 0:
+        return ids  # nothing to map: every slot already carries the sentinel
     gid = gids[jnp.clip(ids, 0, n - 1)]
     pos = jnp.searchsorted(tombstones, gid)
     hit = tombstones[jnp.clip(pos, 0, tombstones.shape[0] - 1)] == gid
@@ -250,6 +258,12 @@ def stage_rerank(
     candidates, ascending; invalid -> (BIG_DIST, -1)).
     """
     impl = impl or getattr(cfg, "rerank_impl", "fused")
+    if dataset.shape[0] == 0:
+        # No rows to rank against; both executors would gather from a
+        # zero-length dataset.  Emit the all-invalid result directly.
+        q = ids.shape[0]
+        return (jnp.full((q, cfg.k), BIG_DIST, jnp.int32),
+                jnp.full((q, cfg.k), -1, jnp.int32))
     if impl == "scan":
         return l1_distance_chunked(
             dataset, queries, ids, cfg.k, cfg.rerank_chunk)

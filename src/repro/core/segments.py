@@ -78,6 +78,8 @@ def _query_segment(cfg: IndexConfig, state: IndexState, gids: jax.Array,
         state.sorted_ids, n, queries)
     ids = pipe.stage_tombstone(ids, gids, tombstones, n)
     d, i = pipe.stage_rerank(cfg, state.dataset, queries, ids)
+    if n == 0:  # zero-point segment: rerank is all-invalid, gids is empty
+        return d, i
     gid = jnp.where(i >= 0, gids[jnp.clip(i, 0, n - 1)], -1)
     return d, gid
 

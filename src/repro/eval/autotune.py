@@ -1,0 +1,199 @@
+"""Recall-target autotuner: the paper's success model, inverted.
+
+``core.multiprobe`` already computes P_T(d) — the probability that one hash
+table's probing sequence (epicenter + T template probes) lands the bucket of
+a point at L1 distance d (paper Sect. 4, ``sequence_success`` /
+``success_table_mc``).  With L independent tables the per-neighbor success is
+1 - (1 - P_T(d))^L, so expected recall@k is that expression averaged over
+the distances of the true neighbors.  The autotuner runs the model forward
+over a (L, T) ladder, picks the cheapest config whose *predicted* recall
+meets the target, then **validates** on a calibration split (perturbed
+copies of indexed points + exact ground truth) and escalates — candidate
+cap first, since cap truncation is the one cost the analytical model cannot
+see, then tables — until the measured recall meets the target or the ladder
+is exhausted.
+
+``ServeConfig.target_recall`` routes through :func:`tune_for_recall` at
+engine startup, which makes quality a first-class serving config input
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import multiprobe as mp_lib
+from repro.core.index import IndexConfig, build_index, query_index
+from repro.core.pipeline import BIG_DIST
+
+__all__ = ["AutotuneResult", "predicted_recall", "tune_for_recall"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneResult:
+    """Outcome of one tuning run; ``cfg`` is the config to serve with."""
+
+    cfg: IndexConfig
+    target_recall: float
+    predicted_recall: float     # model prediction for the returned cfg
+    validated_recall: float     # measured on the calibration split
+    met_target: bool
+    d_calib: Tuple[float, ...]  # representative neighbor distances used
+    rounds: int
+    history: Tuple[dict, ...]   # one record per validation round
+    # the validated IndexState of the returned cfg — callers that serve the
+    # same dataset can seed from it instead of rebuilding (it IS the index
+    # build_index would produce for (cfg, key, dataset))
+    state: Optional[object] = None
+
+
+def _rep_distances(
+    true_d: np.ndarray, family: str,
+    quantiles: Sequence[float] = (0.15, 0.35, 0.55, 0.75, 0.92),
+) -> Tuple[float, ...]:
+    """Representative true-neighbor distances: quantiles of the calibration
+    ground-truth distance pool.  Recall@k averages over neighbors at *all*
+    ranks, so the model must see the distance spread, not just the mean."""
+    flat = np.asarray(true_d, np.float64).ravel()
+    flat = flat[flat < BIG_DIST]
+    if flat.size == 0:
+        raise ValueError("calibration ground truth has no valid distances")
+    qs = np.quantile(flat, quantiles)
+    if family == "rw":
+        # the random-walk displacement pmf is defined on integer step counts
+        qs = np.maximum(1.0, np.rint(qs))
+    return tuple(float(x) for x in qs)
+
+
+def predicted_recall(
+    cfg: IndexConfig, d_values: Sequence[float],
+    mc_runs: int = 48, seed: int = 0,
+) -> float:
+    """Model recall@k for ``cfg``: E_d[1 - (1 - P_T(d))^L].
+
+    P_T(d) comes from ``success_table_mc`` with ``use_template=True`` — the
+    success of the *actual* universal-template probing sequence the query
+    path executes, Monte-Carlo averaged over epicenter offsets — so the
+    prediction matches the implementation, not the enumeration-optimal
+    sequence of paper Table 1.
+    """
+    dv = [int(d) if cfg.family == "rw" else float(d) for d in d_values]
+    tbl = mp_lib.success_table_mc(
+        cfg.family, cfg.num_hashes, float(cfg.width), dv, [cfg.num_probes],
+        runs=mc_runs, seed=seed, use_template=True)
+    p_t = np.clip(tbl[:, 0], 0.0, 1.0)
+    return float(np.mean(1.0 - (1.0 - p_t) ** cfg.num_tables))
+
+
+def _calibration_queries(
+    data: np.ndarray, num: int, universe: int, seed: int = 0,
+) -> np.ndarray:
+    """Perturbed copies of indexed points (valid even coordinates).
+
+    A raw copy would make rank 0 a trivial distance-0 self-hit; the small
+    Laplace offset keeps the split near-but-not-on the index, like the
+    synthetic query generator (`data/ann_synthetic.make_queries`)."""
+    rng = np.random.default_rng(seed)
+    rows = data[rng.integers(0, data.shape[0], size=num)].astype(np.float64)
+    rows += rng.laplace(0.0, 0.01 * universe, size=rows.shape)
+    even = 2 * np.round(rows / 2.0)
+    return np.clip(even, 0, universe).astype(np.int32)
+
+
+def tune_for_recall(
+    cfg: IndexConfig,
+    dataset,
+    target_recall: float,
+    key: Optional[jax.Array] = None,
+    num_calib: int = 32,
+    table_ladder: Sequence[int] = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32),
+    probe_ladder: Optional[Sequence[int]] = None,
+    max_rounds: int = 4,
+    mc_runs: int = 48,
+    seed: int = 0,
+) -> AutotuneResult:
+    """Propose + validate (num_tables, num_probes, candidate_cap) for a
+    target recall@k.  ``cfg`` supplies everything else (family, M, W, k).
+
+    Returns the best config found; ``met_target`` says whether the measured
+    calibration recall reached the target (the caller decides whether a miss
+    is an error — the serving engine serves the best effort and reports it).
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    dataset = jnp.asarray(dataset)
+    n, _ = dataset.shape
+    if n == 0:
+        raise ValueError("cannot autotune over an empty dataset")
+    calib_q = jnp.asarray(_calibration_queries(
+        np.asarray(dataset), min(num_calib, max(4, n)), cfg.universe, seed))
+    td, ti = bl.brute_force_l1(dataset, calib_q, cfg.k)
+    ti = np.asarray(ti)
+    d_values = _rep_distances(np.asarray(td), cfg.family)
+
+    if probe_ladder is None:
+        probe_ladder = (cfg.num_probes,)
+    table_ladder = tuple(sorted(set(table_ladder)))
+    probe_ladder = tuple(sorted(set(probe_ladder)))
+
+    # Analytic proposal: for each T, the smallest L whose predicted recall
+    # meets the target; then the cheapest (L, T) by probe count L*(T+1).
+    proposals = []
+    for t_probes in probe_ladder:
+        for l_tables in table_ladder:
+            cand = dataclasses.replace(
+                cfg, num_tables=l_tables, num_probes=t_probes)
+            pred = predicted_recall(cand, d_values, mc_runs, seed)
+            if pred >= target_recall:
+                proposals.append((l_tables * (t_probes + 1), l_tables,
+                                  t_probes, pred))
+                break
+    if proposals:
+        _, l_tables, t_probes, pred = min(proposals)
+    else:  # model says the ladder can't reach the target; take the top rung
+        l_tables, t_probes = table_ladder[-1], probe_ladder[-1]
+        pred = predicted_recall(
+            dataclasses.replace(cfg, num_tables=l_tables,
+                                num_probes=t_probes), d_values, mc_runs, seed)
+
+    cap = max(cfg.candidate_cap, 2 * cfg.k)
+    cap_max = 4 * cap
+    history, best = [], None
+    for rnd in range(1, max_rounds + 1):
+        cand = dataclasses.replace(
+            cfg, num_tables=l_tables, num_probes=t_probes, candidate_cap=cap)
+        pred = predicted_recall(cand, d_values, mc_runs, seed)
+        state = build_index(cand, key, dataset)
+        _, ids = query_index(cand, state, calib_q)
+        val = float(bl.recall(np.asarray(ids), ti))
+        history.append({"round": rnd, "num_tables": l_tables,
+                        "num_probes": t_probes, "candidate_cap": cap,
+                        "predicted": round(pred, 4),
+                        "validated": round(val, 4)})
+        if best is None or val > best[0]:
+            best = (val, cand, pred, state)
+        if val >= target_recall:
+            break
+        # Escalation: cap truncation is invisible to the analytical model,
+        # so widen the cap first; only then climb the table/probe ladders.
+        if cap < cap_max:
+            cap *= 2
+            continue
+        higher_l = [x for x in table_ladder if x > l_tables]
+        higher_t = [x for x in probe_ladder if x > t_probes]
+        if higher_l:
+            l_tables = higher_l[0]
+        elif higher_t:
+            t_probes = higher_t[0]
+        else:
+            break
+    val, cand, pred, best_state = best
+    return AutotuneResult(
+        cfg=cand, target_recall=float(target_recall),
+        predicted_recall=float(pred), validated_recall=val,
+        met_target=val >= target_recall, d_calib=d_values,
+        rounds=len(history), history=tuple(history), state=best_state)

@@ -1,0 +1,305 @@
+"""Shared-ground-truth quality harness (paper Sect. 5 / Tables 3-4 protocol).
+
+One :class:`QualityRun` owns a dataset + query set + *one* exact L1 ground
+truth (``brute_force_l1``), and every scheme is scored against it — the
+evaluation discipline of Cai's "revisit" benchmark (recall-vs-cost curves
+under a shared exact-GT protocol):
+
+  * schemes: MP-RW-LSH, RW-LSH (single-probe, the paper's own baseline),
+    CP-LSH, MP-CP-LSH, and SRS (projected brute-force upper bound);
+  * sweeps ``num_tables`` x ``num_probes`` per scheme, recording recall@k
+    and overall ratio per point, and derives the paper's headline
+    statistic: **tables needed to reach recall R** per scheme, plus the
+    CP/MP table-count ratio;
+  * doubles as a **cross-layer consistency oracle**: the same config is
+    pushed through ``query_index`` (flat), ``SegmentedIndex.query``
+    (fresh, mutated, and mutated-then-compacted), and the
+    ``dist_query_fn`` all-gather path, asserting the quality the curves
+    report is the quality every serving layer actually delivers.
+
+``benchmarks/quality_bench.py`` drives this module and persists
+``BENCH_quality.json``; DESIGN.md §6 documents the protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core.index import IndexConfig, build_index, make_params, query_index
+from repro.core.segments import SegmentedIndex
+
+__all__ = ["SCHEMES", "QualitySpec", "QualityRun", "tables_needed"]
+
+# Sweep behavior per scheme: single-probe schemes pin T=0; 'srs' is special
+# (no hash tables at all — a projected brute-force accuracy upper bound).
+SCHEMES = ("mp-rw-lsh", "rw-lsh", "cp-lsh", "mp-cp-lsh", "srs")
+_MULTIPROBE = {"mp-rw-lsh": True, "rw-lsh": False,
+               "cp-lsh": False, "mp-cp-lsh": True}
+
+
+@dataclasses.dataclass(frozen=True)
+class QualitySpec:
+    """Static sweep parameters (widths are tuned per dataset, see below)."""
+
+    k: int = 10
+    table_sweep: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+    # single-probe schemes burn tables much faster (that IS the paper's
+    # claim), so their sweep may extend further; None = same as table_sweep
+    table_sweep_single: Optional[Tuple[int, ...]] = None
+    probe_sweep: Tuple[int, ...] = (100,)     # T values for multiprobe schemes
+    candidate_cap: int = 64
+    num_hashes_rw: int = 12
+    num_hashes_cp: int = 8
+    rerank_chunk: int = 1024
+    srs_proj: int = 10
+    srs_t: int = 1024                          # projected t-NN candidates
+    target_recall: float = 0.9
+    seed: int = 0
+
+
+def tables_needed(records: Sequence[dict], scheme: str,
+                  target: float) -> Optional[int]:
+    """Smallest num_tables at which ``scheme`` reaches ``target`` recall
+    (any probe count); None when the sweep never gets there."""
+    hits = [r["num_tables"] for r in records
+            if r["scheme"] == scheme and r["recall"] >= target]
+    return min(hits) if hits else None
+
+
+class QualityRun:
+    """One dataset + one exact ground truth; every scheme scored against it."""
+
+    def __init__(self, data, queries, universe: int,
+                 spec: QualitySpec = QualitySpec()):
+        self.spec = spec
+        self.universe = int(universe)
+        self.data = jnp.asarray(data)
+        self.queries = jnp.asarray(queries)
+        self.key = jax.random.PRNGKey(spec.seed)
+        td, ti = bl.brute_force_l1(self.data, self.queries, spec.k)
+        self.true_d = np.asarray(td)
+        self.true_i = np.asarray(ti)
+        # Per-dataset width tuning, exactly as benchmarks/table4 does it:
+        # the RW raw-hash spread at the near radius is sqrt(d1); the Cauchy
+        # scale IS d1.  dbar comes from the shared ground truth for free.
+        dbar = float(self.true_d.mean())
+        self.dbar = dbar
+        self.w_rw = max(8, int(3.0 * np.sqrt(dbar)) & ~1)
+        self.w_cp = max(8, int(4.0 * dbar))
+
+    # -- configs -----------------------------------------------------------
+
+    def scheme_config(self, scheme: str, num_tables: int,
+                      num_probes: Optional[int] = None) -> IndexConfig:
+        s = self.spec
+        if scheme not in _MULTIPROBE:
+            raise ValueError(f"no IndexConfig for scheme {scheme!r}")
+        if not _MULTIPROBE[scheme]:
+            num_probes = 0
+        elif num_probes is None:
+            num_probes = s.probe_sweep[-1]
+        rw = scheme in ("mp-rw-lsh", "rw-lsh")
+        return IndexConfig(
+            num_tables=num_tables,
+            num_hashes=s.num_hashes_rw if rw else s.num_hashes_cp,
+            width=self.w_rw if rw else self.w_cp,
+            num_probes=num_probes,
+            candidate_cap=s.candidate_cap,
+            universe=self.universe,
+            family="rw" if rw else "cauchy",
+            k=s.k,
+            rerank_chunk=s.rerank_chunk)
+
+    # -- query layers (the cross-layer oracle's subjects) ------------------
+
+    def query_flat(self, cfg: IndexConfig):
+        state = build_index(cfg, self.key, self.data)
+        return query_index(cfg, state, self.queries)
+
+    def query_segmented(self, cfg: IndexConfig):
+        idx = SegmentedIndex.from_dataset(cfg, self.key, self.data)
+        return idx.query(self.queries)
+
+    def query_dist(self, cfg: IndexConfig, merge: str = "allgather"):
+        """All-gather shard_map path on a (1, n_devices) mesh.
+
+        One row shard keeps the candidate set identical to the flat path
+        (per-shard candidate_cap never truncates differently), so the
+        result must be bit-for-bit equal to ``query_index`` — which is
+        exactly what makes this a consistency oracle rather than an
+        approximate comparison.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.launch import dist_index as di
+        n_dev = len(jax.devices())
+        if self.queries.shape[0] % n_dev:
+            n_dev = 1
+        mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+        params = make_params(cfg, self.key, int(self.data.shape[1]))
+        with mesh:
+            dj = jax.device_put(self.data, NamedSharding(mesh, P("data", None)))
+            qj = jax.device_put(self.queries,
+                                NamedSharding(mesh, P("model", None)))
+            state = di.dist_build_fn(cfg, mesh)(dj, params)
+            d, i = di.dist_query_fn(cfg, mesh, merge=merge)(state, qj)
+            return jnp.asarray(d), jnp.asarray(i)
+
+    # -- scoring -----------------------------------------------------------
+
+    def _score(self, d, i, ms_per_query: Optional[float] = None) -> dict:
+        rec = {"recall": float(bl.recall(np.asarray(i), self.true_i)),
+               "ratio": float(bl.overall_ratio(np.asarray(d), self.true_d))}
+        if ms_per_query is not None:
+            rec["ms_per_query"] = ms_per_query
+        return rec
+
+    def eval_config(self, cfg: IndexConfig, timed: bool = False) -> dict:
+        state = build_index(cfg, self.key, self.data)
+        d, i = query_index(cfg, state, self.queries)  # compile + result
+        ms = None
+        if timed:
+            jax.tree.leaves((d, i))[0].block_until_ready()
+            t0 = time.perf_counter()
+            d, i = query_index(cfg, state, self.queries)
+            jax.tree.leaves((d, i))[0].block_until_ready()
+            ms = (time.perf_counter() - t0) * 1e3 / self.queries.shape[0]
+        return self._score(d, i, ms)
+
+    def eval_srs(self, timed: bool = False) -> dict:
+        s = self.spec
+        t = min(s.srs_t, int(self.data.shape[0]))
+        srs = bl.build_srs(jax.random.fold_in(self.key, 1), self.data,
+                           s.srs_proj)
+        d, i = bl.query_srs(srs, self.queries, t, s.k)
+        ms = None
+        if timed:
+            d.block_until_ready()
+            t0 = time.perf_counter()
+            d, i = bl.query_srs(srs, self.queries, t, s.k)
+            d.block_until_ready()
+            ms = (time.perf_counter() - t0) * 1e3 / self.queries.shape[0]
+        return self._score(d, i, ms)
+
+    # -- sweeps + derived statistics ---------------------------------------
+
+    def sweep(self, schemes: Sequence[str] = SCHEMES,
+              timed: bool = False) -> List[dict]:
+        """recall@k / ratio over num_tables x num_probes for every scheme,
+        all against the one shared ground truth."""
+        records: List[dict] = []
+        for scheme in schemes:
+            if scheme == "srs":
+                rec = self.eval_srs(timed)
+                rec.update(scheme="srs", num_tables=0, num_probes=0)
+                records.append(rec)
+                continue
+            multi = _MULTIPROBE[scheme]
+            probes = self.spec.probe_sweep if multi else (0,)
+            tables = (self.spec.table_sweep if multi else
+                      self.spec.table_sweep_single or self.spec.table_sweep)
+            for t_probes in probes:
+                for l_tables in tables:
+                    cfg = self.scheme_config(scheme, l_tables, t_probes)
+                    rec = self.eval_config(cfg, timed)
+                    rec.update(scheme=scheme, num_tables=l_tables,
+                               num_probes=t_probes)
+                    records.append(rec)
+        return records
+
+    def table_claim(self, records: Sequence[dict],
+                    target: Optional[float] = None) -> dict:
+        """The paper's headline: tables needed at recall R, per scheme, and
+        the baseline/MP-RW ratios (paper Sect. 5: 15-53x for CP-LSH)."""
+        target = self.spec.target_recall if target is None else target
+        needed = {s: tables_needed(records, s, target)
+                  for s in ("mp-rw-lsh", "rw-lsh", "cp-lsh", "mp-cp-lsh")
+                  if any(r["scheme"] == s for r in records)}
+        l_mp = needed.get("mp-rw-lsh")
+        ratios = {}
+        for s, l in needed.items():
+            if s == "mp-rw-lsh" or l_mp is None:
+                continue
+            # None = "more than the sweep maximum": still strictly more
+            # tables than MP-RW, reported as a lower bound on the ratio.
+            ratios[s] = (None if l is None else round(l / l_mp, 2))
+        max_l = max(self.spec.table_sweep
+                    + (self.spec.table_sweep_single or ()))
+        return {"target_recall": target, "tables_needed": needed,
+                "ratio_vs_mp_rw": ratios, "sweep_max_tables": max_l}
+
+    # -- cross-layer consistency oracle ------------------------------------
+
+    def check_segmented(self, cfg: IndexConfig, split: float = 0.5,
+                        delta_cap: Optional[int] = None, flat=None) -> dict:
+        """Mutation-path oracle: build half, insert the rest, query while
+        fragmented, compact, query again.
+
+        Invariants checked (DESIGN.md Sect. 3 + §6):
+          * fresh single-segment == flat ``query_index`` bit-for-bit;
+          * fragmented (multi-segment + delta) recall never regresses below
+            the compacted recall — each source contributes its own
+            candidate_cap, so the fragmented index examines a superset;
+          * after ``compact()`` the result is bit-identical to the fresh
+            build (insertion order and gids are preserved), so the
+            *recall matches exactly*.
+        """
+        data_np = np.asarray(self.data)
+        n = data_np.shape[0]
+        n0 = max(1, int(n * split))
+        fd, fi = self.query_flat(cfg) if flat is None else flat
+        fresh = self._score(fd, fi)
+
+        frag = SegmentedIndex.from_dataset(
+            cfg, self.key, jnp.asarray(data_np[:n0]),
+            delta_cap=delta_cap or max(64, (n - n0) // 3))
+        frag.insert(data_np[n0:])                  # seals segments + delta
+        md, mi = frag.query(self.queries)
+        mutated = self._score(md, mi)
+        segments_while_fragmented = frag.num_segments
+        frag.compact()
+        cd, ci = frag.query(self.queries)
+        compacted = self._score(cd, ci)
+
+        idx = SegmentedIndex.from_dataset(cfg, self.key, self.data)
+        sd, si = idx.query(self.queries)
+        return {
+            "fresh_recall": fresh["recall"],
+            "mutated_recall": mutated["recall"],
+            "compacted_recall": compacted["recall"],
+            "segments_while_fragmented": segments_while_fragmented,
+            "segmented_matches_flat": bool(
+                np.array_equal(np.asarray(sd), np.asarray(fd))
+                and np.array_equal(np.asarray(si), np.asarray(fi))),
+            "compacted_matches_fresh": bool(
+                np.array_equal(np.asarray(cd), np.asarray(fd))
+                and np.array_equal(np.asarray(ci), np.asarray(fi))),
+            "mutated_no_regression":
+                mutated["recall"] >= compacted["recall"],
+        }
+
+    def check_distributed(self, cfg: IndexConfig, flat=None) -> dict:
+        """Distributed-path oracle: all-gather shard_map == flat, bit-for-bit
+        (single row shard; queries sharded over 'model').  ``flat`` may pass
+        a precomputed ``query_flat(cfg)`` result to skip the rebuild."""
+        fd, fi = self.query_flat(cfg) if flat is None else flat
+        dd, di_ = self.query_dist(cfg)
+        return {
+            "devices": len(jax.devices()),
+            "dist_matches_flat": bool(
+                np.array_equal(np.asarray(dd), np.asarray(fd))
+                and np.array_equal(np.asarray(di_), np.asarray(fi))),
+        }
+
+    def check_cross_layer(self, cfg: IndexConfig) -> dict:
+        """All oracle layers for one config; every flag must be True/hold."""
+        flat = self.query_flat(cfg)  # shared by both checks (one build)
+        out = self.check_segmented(cfg, flat=flat)
+        out.update(self.check_distributed(cfg, flat=flat))
+        return out

@@ -150,7 +150,7 @@ def dist_query_fn(cfg: IndexConfig, mesh: Mesh, merge: str = "allgather"):
 
     in_specs = (
         P(None, rows), P(None, rows), P(rows, None), P(rows),
-        P(), P(), P(None if False else "model", None),
+        P(), P(), P("model", None),
     )
     fn = shard_map(local_query, mesh=mesh, in_specs=in_specs,
                    out_specs=(P("model", None), P("model", None)),

@@ -27,6 +27,9 @@ def main(argv=None):
     ap.add_argument("--width", type=int, default=56)
     ap.add_argument("--probes", type=int, default=200)
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--target-recall", type=float, default=None,
+                    help="autotune (tables, probes, cap) for this recall@k "
+                         "instead of serving --tables/--probes as given")
     args = ap.parse_args(argv)
 
     spec = ds.DatasetSpec("serve", n=args.n, dim=args.dim, universe=128,
@@ -37,8 +40,10 @@ def main(argv=None):
     cfg = IndexConfig(num_tables=args.tables, num_hashes=12, width=args.width,
                       num_probes=args.probes, candidate_cap=128,
                       universe=spec.universe, k=args.k, rerank_chunk=1024)
-    engine = AnnServingEngine(cfg, ServeConfig(batch_size=args.batch),
-                              jnp.asarray(data))
+    engine = AnnServingEngine(
+        cfg, ServeConfig(batch_size=args.batch,
+                         target_recall=args.target_recall),
+        jnp.asarray(data))
     engine.submit(queries)
     d, i = engine.drain()
 

@@ -54,6 +54,9 @@ class ServeConfig:
     compact_watermark: float = 0.5  # delta fill fraction that triggers compaction
     max_segments: int = 4           # segment count that triggers compaction
     tombstone_watermark: float = 0.25  # dead/live fraction that triggers compaction
+    target_recall: Optional[float] = None  # quality target: autotune (L, T,
+                                   # candidate_cap) at startup (DESIGN.md §6)
+    autotune_calib: int = 32       # calibration queries for the autotuner
 
 
 class AnnServingEngine:
@@ -61,11 +64,35 @@ class AnnServingEngine:
 
     def __init__(self, cfg: IndexConfig, serve_cfg: ServeConfig,
                  dataset: jax.Array, key: Optional[jax.Array] = None):
-        self.cfg = cfg
         self.serve_cfg = serve_cfg
         key = key if key is not None else jax.random.PRNGKey(0)
-        self.index = SegmentedIndex.from_dataset(
-            cfg, key, dataset, delta_cap=serve_cfg.delta_cap)
+        self.autotune = None
+        if serve_cfg.target_recall is not None and dataset.shape[0] > 0:
+            # Quality is a first-class config input: derive (L, T, cap) from
+            # the analytical success model + a calibration split, then serve
+            # with the tuned config (DESIGN.md §6).  Imported lazily so the
+            # engine has no hard dependency on the eval subsystem.  An empty
+            # dataset (cold start before any inserts) has nothing to
+            # calibrate against; serve as configured and let the operator
+            # re-tune once data exists.
+            from repro.eval.autotune import tune_for_recall
+            self.autotune = tune_for_recall(
+                cfg, dataset, serve_cfg.target_recall, key=key,
+                num_calib=serve_cfg.autotune_calib)
+            cfg = self.autotune.cfg
+        self.cfg = cfg
+        if self.autotune is not None and self.autotune.state is not None:
+            # The tuner already built and validated exactly this index
+            # (same cfg/key/dataset); seed the segment from it instead of
+            # re-hashing and re-sorting the whole dataset.
+            n = dataset.shape[0]
+            self.index = SegmentedIndex.from_checkpoint(
+                cfg, self.autotune.state,
+                jnp.arange(n, dtype=jnp.int32), n,
+                delta_cap=serve_cfg.delta_cap)
+        else:
+            self.index = SegmentedIndex.from_dataset(
+                cfg, key, dataset, delta_cap=serve_cfg.delta_cap)
         self._dim = dataset.shape[1]
         self._pending: List[np.ndarray] = []
         self.stats = {"batches": 0, "queries": 0, "hedges": 0,
@@ -174,6 +201,12 @@ class AnnServingEngine:
         t0 = time.perf_counter()
         self.index.compact()
         self.stats["compact_ms"] += (time.perf_counter() - t0) * 1e3
+        # Compaction changes structure_signature(), so every warm bucket
+        # just went cold.  Re-warm immediately: the XLA compiles land in
+        # warmup_ms instead of silently inflating the next batches, and
+        # bucket_cold_hits stays an honest "unplanned recompile" counter.
+        if self.serve_cfg.warm_buckets:
+            self.warmup()
 
     def _maybe_compact(self) -> None:
         """Watermark-triggered compaction (DESIGN.md Sect. 3).
@@ -209,7 +242,16 @@ class AnnServingEngine:
         return batch, len(take)
 
     def drain(self) -> Tuple[np.ndarray, np.ndarray]:
-        """Process all pending requests; returns (dists, ids) stacked."""
+        """Process all pending requests; returns (dists (B,k) int32 asc,
+        gids (B,k) int32, -1 pad) stacked over requests.
+
+        Lazy re-warm: mutations that did NOT trigger a compaction (delta
+        activation, tombstone-array growth) also change the structure
+        signature; warming here keeps the batch loop recompile-free for
+        those too (warmup() is a set-membership no-op when already warm).
+        """
+        if self.serve_cfg.warm_buckets and self._pending:
+            self.warmup()
         out_d, out_i = [], []
         while True:
             nb = self._next_batch()
@@ -236,13 +278,28 @@ class AnnServingEngine:
             out_i.append(np.asarray(i)[:n_real])
         self._maybe_compact()
         if not out_d:
-            return np.zeros((0, self.cfg.k)), np.zeros((0, self.cfg.k))
+            # Same dtypes as the non-empty path (int32 dists/ids): callers
+            # concatenate drain outputs, and a float64 empty row would
+            # silently promote the whole result.
+            return (np.zeros((0, self.cfg.k), np.int32),
+                    np.zeros((0, self.cfg.k), np.int32))
         return np.concatenate(out_d), np.concatenate(out_i)
 
     def summary(self) -> dict:
         lat = np.asarray(self.stats["batch_ms"] or [0.0], np.float64)
         total_s = self.stats["total_ms"] / 1e3
+        quality = None
+        if self.autotune is not None:
+            quality = {
+                "target_recall": self.autotune.target_recall,
+                "validated_recall": round(self.autotune.validated_recall, 4),
+                "met_target": self.autotune.met_target,
+                "num_tables": self.cfg.num_tables,
+                "num_probes": self.cfg.num_probes,
+                "candidate_cap": self.cfg.candidate_cap,
+            }
         return {
+            "quality": quality,
             "queries": self.stats["queries"],
             "batches": self.stats["batches"],
             "hedges": self.stats["hedges"],

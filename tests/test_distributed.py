@@ -64,18 +64,68 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-@pytest.mark.slow
-def test_dist_query_matches_single_shard():
+def _run_subprocess(script: str) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("JAX_PLATFORMS", None)
     env["JAX_PLATFORMS"] = "cpu"
-    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+    res = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, res.stderr[-3000:]
     line = [l for l in res.stdout.splitlines() if l.startswith("RESULT")][0]
-    out = json.loads(line[len("RESULT"):])
+    return json.loads(line[len("RESULT"):])
+
+
+@pytest.mark.slow
+def test_dist_query_matches_single_shard():
+    out = _run_subprocess(SCRIPT)
     assert out["ag_le_single"], out
     assert out["ids_verify"], out
     assert out["ring_eq_ag"], out
+
+
+# ISSUE 3 satellite: with queries sharded over 'model' and a SINGLE row
+# shard, per-shard candidate truncation is identical to the flat path, so
+# dist_query_fn must agree with query_index bit-for-bit.  This pins the
+# 'model' in_spec of the query batch (the dead-conditional line).
+MODEL_SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.index import IndexConfig, build_index, query_index, make_params
+    from repro.data import ann_synthetic as ds
+    from repro.launch import dist_index as di
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    spec = ds.DatasetSpec("tm", n=2048, dim=16, universe=64, num_clusters=8)
+    data = ds.make_dataset(spec)
+    queries = ds.make_queries(spec, data, 16)
+    cfg = IndexConfig(num_tables=4, num_hashes=8, width=24, num_probes=30,
+                      candidate_cap=32, universe=64, k=8, rerank_chunk=128)
+    params = make_params(cfg, jax.random.PRNGKey(0), 16)
+
+    ref_state = build_index(cfg, jax.random.PRNGKey(0), jnp.asarray(data),
+                            params=params)
+    rd, ri = query_index(cfg, ref_state, jnp.asarray(queries))
+
+    out = {"devices": len(jax.devices())}
+    with mesh:
+        dj = jax.device_put(jnp.asarray(data), NamedSharding(mesh, P("data", None)))
+        qj = jax.device_put(jnp.asarray(queries), NamedSharding(mesh, P("model", None)))
+        state = di.dist_build_fn(cfg, mesh)(dj, params)
+        dd, ii = di.dist_query_fn(cfg, mesh, merge="allgather")(state, qj)
+        out["dists_equal"] = bool((np.asarray(dd) == np.asarray(rd)).all())
+        out["ids_equal"] = bool((np.asarray(ii) == np.asarray(ri)).all())
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow  # multi-device subprocess; CI pins it by node id instead
+def test_model_sharded_query_bit_identical_to_single():
+    out = _run_subprocess(MODEL_SHARD_SCRIPT)
+    assert out["devices"] == 8, out
+    assert out["dists_equal"], out
+    assert out["ids_equal"], out

@@ -261,3 +261,75 @@ def test_engine_serving_smoke(cfg, small):
         assert key in s
     assert s["queries"] == queries.shape[0] + 8
     assert s["queries_per_s"] > 0
+
+
+def test_engine_empty_drain_matches_nonempty_dtypes(cfg, small):
+    """ISSUE 3 satellite: the empty drain path must return the same int32
+    dtypes as the non-empty path (a float64 empty row silently promotes any
+    concatenation downstream)."""
+    data, queries = small
+    engine = AnnServingEngine(cfg, ServeConfig(batch_size=8), data)
+    d0, i0 = engine.drain()                        # nothing pending
+    assert d0.shape == (0, cfg.k) and i0.shape == (0, cfg.k)
+    engine.submit(np.asarray(queries[:3]))
+    d1, i1 = engine.drain()
+    assert d0.dtype == d1.dtype == np.int32
+    assert i0.dtype == i1.dtype == np.int32
+    assert np.concatenate([d0, d1]).dtype == np.int32
+
+
+def test_engine_cold_hits_flat_across_mutation_cycle(cfg, small):
+    """ISSUE 3 satellite: compaction changes structure_signature(); the
+    engine must re-warm (eagerly after compact, lazily before a drain) so an
+    insert -> compact -> drain cycle never pays a cold XLA compile inside
+    the batch loop."""
+    data, queries = small
+    engine = AnnServingEngine(
+        cfg, ServeConfig(batch_size=16, delta_cap=64, compact_watermark=0.5),
+        data)
+    warm_ms0 = engine.stats["warmup_ms"]
+    assert engine.stats["bucket_cold_hits"] == 0
+    rng = np.random.default_rng(21)
+    pts = (rng.integers(0, 32, (40, data.shape[1])) * 2).astype(np.int32)
+    engine.insert(pts)                              # 40/64 -> compaction
+    assert engine.index.compactions >= 1
+    engine.submit(np.asarray(queries))
+    engine.drain()
+    assert engine.stats["bucket_cold_hits"] == 0
+    # the compiles happened, attributed to warmup, not silently to batches
+    assert engine.stats["warmup_ms"] > warm_ms0
+
+    # delta-only mutation (no compaction): lazy re-warm at drain time
+    engine.insert(pts[:8])
+    assert engine.index.delta_fill > 0
+    engine.submit(np.asarray(queries[:5]))
+    engine.drain()
+    assert engine.stats["bucket_cold_hits"] == 0
+
+
+def test_zero_point_segment_query(cfg):
+    """ISSUE 3 satellite: n=0 shards (empty seed, or delete-everything +
+    compact) must answer queries with all-invalid results instead of
+    tripping the clip/gather in ``stage_candidate_gather``."""
+    dim = 16
+    queries = jnp.zeros((3, dim), jnp.int32)
+    empty = jnp.zeros((0, dim), jnp.int32)
+
+    idx = SegmentedIndex.from_dataset(cfg, KEY, empty)
+    d, i = idx.query(queries)
+    assert (np.asarray(i) == -1).all()
+
+    gids = idx.insert(np.full((2, dim), 10, np.int32))  # delta over empty seg
+    d, i = idx.query(jnp.full((1, dim), 10, jnp.int32))
+    assert np.asarray(d)[0, 0] == 0 and np.asarray(i)[0, 0] == gids[0]
+
+    idx.delete(gids)
+    idx.compact()                                   # -> zero segments
+    assert idx.num_segments == 0
+    d, i = idx.query(queries)
+    assert (np.asarray(i) == -1).all()
+
+    # the flat path over an empty build_index is guarded too
+    state = build_index(cfg, KEY, empty)
+    d, i = query_index(cfg, state, queries)
+    assert (np.asarray(i) == -1).all()
