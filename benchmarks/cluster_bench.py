@@ -1,0 +1,199 @@
+"""Cluster serving runtime benchmark + chaos drill (ISSUE 4 acceptance).
+
+Drives the sharded/replicated/WAL-durable ``ClusterRouter`` (DESIGN.md §7)
+through the scenarios the subsystem exists for, and emits machine-readable
+``BENCH_cluster.json`` whose acceptance flags CI asserts:
+
+  1. steady-state traffic: S shards x R replicas, mixed batch sizes —
+     results bit-identical to the flat single-engine path;
+  2. chaos: a replica starts failing unannounced mid-traffic — every query
+     still answers (``zero_dropped_queries_under_kill``);
+  3. durability: mutations are WAL'd, the dead replica recovers via
+     snapshot + WAL replay + peer catch-up, its peer is killed so the
+     RECOVERED replica serves, and the answers match the single-engine
+     mirror of the same mutation history (``recovery_consistent``);
+  4. hedging: a replica is made slow (not dead); the router re-issues past
+     the hedge deadline and the fast peer's answer wins
+     (``hedged_reissues``/``hedge_wins``);
+  5. caching + admission: repeat traffic hits the mutation-signature cache;
+     a bounded queue and expired deadlines shed with explicit stats.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster import ClusterConfig, ClusterRouter
+from repro.core.index import IndexConfig, build_index, query_index
+from repro.data import ann_synthetic as ds
+from repro.serve.engine import AnnServingEngine, ServeConfig
+
+
+def main(smoke: bool = False, json_out: str = "BENCH_cluster.json"):
+    t_start = time.time()
+    if smoke:
+        spec = ds.DatasetSpec("clu", n=2000, dim=16, universe=64,
+                              num_clusters=8)
+        cfg = IndexConfig(num_tables=4, num_hashes=8, width=24,
+                          num_probes=20, candidate_cap=256, universe=64,
+                          k=8, rerank_chunk=128)
+        batch, n_queries, waves = 32, 64, 3
+        shards, replicas = 2, 2
+    else:
+        spec = ds.DatasetSpec("clu", n=20000, dim=32, universe=64,
+                              num_clusters=16)
+        cfg = IndexConfig(num_tables=6, num_hashes=10, width=32,
+                          num_probes=50, candidate_cap=512, universe=64,
+                          k=10, rerank_chunk=512)
+        batch, n_queries, waves = 64, 256, 4
+        shards, replicas = 4, 2
+    data = np.asarray(ds.make_dataset(spec))
+    queries = np.asarray(ds.make_queries(spec, data, n_queries))
+    key = jax.random.PRNGKey(0)
+    serve_cfg = ServeConfig(batch_size=batch, delta_cap=256)
+    root = tempfile.mkdtemp(prefix="cluster_bench_")
+
+    t0 = time.perf_counter()
+    router = ClusterRouter(
+        cfg, serve_cfg,
+        ClusterConfig(num_shards=shards, num_replicas=replicas,
+                      hedge_ms=60000.0, wal_fsync=False, cache_capacity=512),
+        data, root, key=key)
+    init_ms = (time.perf_counter() - t0) * 1e3
+
+    # -- 1. steady state: bit-identity vs flat + throughput ---------------
+    state = build_index(cfg, key, jnp.asarray(data))
+    fd, fi = map(np.asarray, query_index(cfg, state, jnp.asarray(queries)))
+    cd, ci = router.query(queries)
+    flat_identical = bool(np.array_equal(cd, fd) and np.array_equal(ci, fi))
+
+    rng = np.random.default_rng(7)
+    t0 = time.perf_counter()
+    steady = 0
+    for wave in range(waves):
+        for size in (3, batch // 2, batch - 1, batch):
+            q = (rng.integers(0, spec.universe // 2, (size, spec.dim)) * 2
+                 ).astype(np.int32)
+            d, i = router.query(q)
+            steady += d.shape[0]
+    steady_ms = (time.perf_counter() - t0) * 1e3
+
+    # -- 2. chaos: unannounced replica failure mid-traffic ----------------
+    mirror = AnnServingEngine(cfg, serve_cfg, dataset=jnp.asarray(data),
+                              key=key)
+    pts = (queries[: n_queries // 2] + 2).astype(np.int32)
+    g_r, g_m = router.insert(pts), mirror.insert(pts)
+    assert np.array_equal(g_r, g_m)
+    submitted = answered = 0
+    for wave in range(waves):
+        if wave == 1:  # crash shard 0 replica 0 without telling the router
+            router.replicas[0][0].fail_next_queries = 10 ** 9
+        q = (queries + wave).astype(np.int32)
+        d, i = router.query(q)
+        submitted += q.shape[0]
+        answered += int((i >= 0).all(axis=1).sum())
+    zero_dropped = bool(answered == submitted)
+
+    # -- 3. durability: WAL replay + catch-up, recovered replica serves ---
+    router.replicas[0][0].alive = False          # the failing replica "dies"
+    router.delete(g_r[::3])                      # mutations while it is down
+    mirror.delete(g_m[::3])
+    recov = router.recover_replica(0, 0)
+    for r in range(1, replicas):                 # peers die: recovered serves
+        router.kill_replica(0, r)
+    rd, ri = router.query(queries)
+    md, mi = mirror.query_batch(queries)
+    recovery_consistent = bool(np.array_equal(rd, md)
+                               and np.array_equal(ri, mi))
+
+    # -- 4. hedging: slow replica, fast peer wins --------------------------
+    hedge_router = ClusterRouter(
+        cfg, serve_cfg,
+        ClusterConfig(num_shards=2, num_replicas=2, hedge_ms=100.0,
+                      wal_fsync=False),
+        data[: spec.n // 2], root + "-hedge", key=key)
+    hedge_router.query(queries[:batch])          # warm every compile path
+    hs0 = hedge_router.summary()                 # cold compiles may hedge too
+    hedge_router.replicas[0][0].slow_ms = 1000.0
+    hedge_router._rr[0] = 0                      # slow replica is preferred
+    t0 = time.perf_counter()
+    hedge_router.query((queries[:batch] + 1).astype(np.int32))
+    hedged_ms = (time.perf_counter() - t0) * 1e3
+    hs = hedge_router.summary()
+    hedged_reissues = hs["hedged_batches"] - hs0["hedged_batches"]
+    hedge_wins = hs["hedge_wins"] - hs0["hedge_wins"]
+
+    # -- 5. cache + admission ---------------------------------------------
+    before = router.summary()["cache_misses"]
+    router.query(queries)                        # repeat: all cache hits
+    cache_hits = router.summary()["cache_hits"]
+    cache_effective = bool(router.summary()["cache_misses"] == before)
+    router.submit(queries[:8], deadline_ms=-1.0)  # already expired
+    router.drain()
+    shed = router.summary()["rejected_deadline"]
+
+    summary = router.summary()
+    acceptance = {
+        "cluster_matches_flat": flat_identical,
+        "zero_dropped_queries_under_kill": zero_dropped,
+        "recovery_consistent": recovery_consistent,
+        "hedged_reissue_exercised": bool(hedged_reissues >= 1
+                                         and hedge_wins >= 1),
+        "cache_effective": cache_effective,
+        "deadline_shedding_works": bool(shed >= 8),
+    }
+    acceptance["ok"] = all(acceptance.values())
+    result = {
+        "bench": "cluster_serving_runtime",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "config": {"n": spec.n, "dim": spec.dim, "shards": shards,
+                   "replicas": replicas, "batch_size": batch,
+                   "queries": n_queries, "k": cfg.k},
+        "init_ms": round(init_ms, 1),
+        "steady_queries": steady,
+        "steady_qps": round(steady / (steady_ms / 1e3), 1),
+        "chaos": {"submitted": submitted, "answered": answered,
+                  "failovers": summary["failovers"],
+                  "marked_dead": summary["replicas_marked_dead"]},
+        "durability": {"replayed": recov["replayed"],
+                       "caught_up": recov["caught_up"],
+                       "recoveries": summary["recoveries"]},
+        "hedging": {"hedge_ms": 100.0, "slow_ms": 1000.0,
+                    "hedged_batches": hedged_reissues,
+                    "hedge_wins": hedge_wins,
+                    "hedged_batch_wall_ms": round(hedged_ms, 1)},
+        "cache": {"hits": cache_hits,
+                  "entries": summary["cache_entries"]},
+        "admission": {"rejected_deadline": shed,
+                      "rejected_queue_full":
+                          summary["rejected_queue_full"]},
+        "acceptance": acceptance,
+        "wall_s": round(time.time() - t_start, 1),
+    }
+    router.close()
+    hedge_router.close()
+    shutil.rmtree(root, ignore_errors=True)
+    shutil.rmtree(root + "-hedge", ignore_errors=True)
+    with open(json_out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"cluster S={shards} R={replicas}: flat_identical={flat_identical} "
+          f"zero_dropped={zero_dropped} recovery={recovery_consistent} "
+          f"hedge_wins={hedge_wins} qps={result['steady_qps']} -> {json_out}")
+    if not acceptance["ok"]:
+        raise SystemExit(f"cluster acceptance failed: {acceptance}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json-out", default="BENCH_cluster.json")
+    main(**vars(ap.parse_args()))

@@ -1,7 +1,8 @@
 """Paper Sect. 5 quality protocol (ISSUE 3 acceptance): recall@k curves for
 all five schemes on one shared exact ground truth, the "tables needed to hit
 recall R" headline statistic, the cross-layer consistency oracle (flat vs
-segmented-mutated-compacted vs distributed all-gather), and an autotuner
+segmented-mutated-compacted vs distributed all-gather vs the sharded
+cluster runtime, incl. kill + WAL-replay recovery), and an autotuner
 demonstration — persisted as machine-readable ``BENCH_quality.json``.
 
 The smoke config must show MP-RW-LSH reaching recall >= 0.9 with strictly
@@ -82,6 +83,9 @@ def main(smoke: bool = False, json_out: str = "BENCH_quality.json"):
         "segmented_matches_flat": consistency["segmented_matches_flat"],
         "mutated_no_regression": consistency["mutated_no_regression"],
         "dist_matches_flat": consistency["dist_matches_flat"],
+        "cluster_matches_flat": consistency["cluster_matches_flat"],
+        "cluster_recovery_matches_flat":
+            consistency["cluster_recovery_matches_flat"],
         "autotune_met_target": tuned.met_target,
     }
     acceptance["ok"] = all(v for k, v in acceptance.items()

@@ -1,1 +1,2 @@
-from .manager import CheckpointManager, save_pytree, restore_pytree  # noqa: F401
+from .manager import (  # noqa: F401
+    CheckpointManager, save_pytree, restore_pytree, restore_flat)

@@ -29,7 +29,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]
+__all__ = ["CheckpointManager", "save_pytree", "restore_pytree",
+           "restore_flat"]
 
 _SEP = "/"
 
@@ -81,6 +82,20 @@ def save_pytree(tree: Any, directory: str, chunk_bytes: int = 1 << 30) -> None:
         json.dump(manifest, f)
 
 
+def _load_leaf(directory: str, meta: dict) -> np.ndarray:
+    """One manifest leaf -> host array (chunk reassembly + dtype re-view)."""
+    if meta["chunks"] == 1:
+        arr = np.load(os.path.join(directory, meta["file"] + ".npy"))
+    else:
+        arr = np.concatenate([
+            np.load(os.path.join(directory, f"{meta['file']}.c{ci}.npy"))
+            for ci in range(meta["chunks"])], axis=0)
+    want = _np_dtype(meta["dtype"])
+    if arr.dtype != want:
+        arr = arr.view(want)  # ml_dtypes stored as raw uints
+    return arr
+
+
 def restore_pytree(template: Any, directory: str, shardings: Any = None) -> Any:
     """Restore into the structure of ``template`` (shapes/dtypes verified).
 
@@ -93,16 +108,7 @@ def restore_pytree(template: Any, directory: str, shardings: Any = None) -> Any:
     flat_s = _flatten(shardings)[0] if shardings is not None else {}
     vals = []
     for key, leaf in flat_t.items():
-        meta = manifest["leaves"][key]
-        if meta["chunks"] == 1:
-            arr = np.load(os.path.join(directory, meta["file"] + ".npy"))
-        else:
-            arr = np.concatenate([
-                np.load(os.path.join(directory, f"{meta['file']}.c{ci}.npy"))
-                for ci in range(meta["chunks"])], axis=0)
-        want = _np_dtype(meta["dtype"])
-        if arr.dtype != want:
-            arr = arr.view(want)  # ml_dtypes stored as raw uints
+        arr = _load_leaf(directory, manifest["leaves"][key])
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{key}: ckpt shape {arr.shape} != {leaf.shape}")
         sh = flat_s.get(key)
@@ -111,12 +117,46 @@ def restore_pytree(template: Any, directory: str, shardings: Any = None) -> Any:
         jax.tree_util.tree_structure(template), vals)
 
 
+def restore_flat(directory: str) -> dict:
+    """Template-free restore: ``{flat_key: np.ndarray}`` from the manifest.
+
+    The cluster recovery path (DESIGN.md §7) restores a replica snapshot
+    before it has rebuilt any index — at that point there is no template
+    tree whose shapes could be known a priori, so shapes/dtypes come from
+    the manifest alone.  Keys are the ``/``-joined tree paths
+    ``save_pytree`` wrote.
+    """
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    return {key: _load_leaf(directory, meta)
+            for key, meta in manifest["leaves"].items()}
+
+
 class CheckpointManager:
     def __init__(self, root: str, keep: int = 3):
         self.root = root
         self.keep = keep
         os.makedirs(root, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._async_error: Optional[BaseException] = None
+        self._promote_orphaned_old()
+
+    def _promote_orphaned_old(self) -> None:
+        """Heal a crash between ``write()``'s two renames.
+
+        A same-step overwrite demotes the existing snapshot to
+        ``step_N.old`` before renaming the new one into place; a crash in
+        between leaves only the ``.old``.  Both directories are complete
+        checkpoints, so promotion (rename back) restores ``step_N`` rather
+        than silently falling back to an older step — which would lose
+        mutations the WAL-durable cluster layer already truncated into N.
+        """
+        for name in os.listdir(self.root):
+            if not name.endswith(".old"):
+                continue
+            base = os.path.join(self.root, name[:-len(".old")])
+            if not os.path.exists(base):
+                os.rename(os.path.join(self.root, name), base)
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.root, f"step_{step:08d}")
@@ -124,8 +164,11 @@ class CheckpointManager:
     def all_steps(self):
         out = []
         for name in os.listdir(self.root):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name.split("_")[1]))
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            suffix = name[len("step_"):]
+            if suffix.isdigit():  # tolerate stray entries (step_junk, notes…)
+                out.append(int(suffix))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -133,9 +176,19 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def wait(self):
+        """Join the async writer; re-raise anything it failed with.
+
+        A failed ``save(blocking=False)`` used to vanish in the daemon
+        thread — the job would happily keep training with NO durable
+        checkpoint.  The error now surfaces on the next synchronization
+        point (``wait()`` or the following ``save()``).
+        """
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._async_error is not None:
+            err, self._async_error = self._async_error, None
+            raise RuntimeError("async checkpoint save failed") from err
 
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
         self.wait()
@@ -149,14 +202,30 @@ class CheckpointManager:
                 shutil.rmtree(tmp)
             save_pytree(host_tree, tmp)
             if os.path.exists(final):
-                shutil.rmtree(final)
+                # same-step overwrite: demote the old snapshot with a rename
+                # (atomic) instead of rmtree-then-rename.  A crash between
+                # the two renames leaves only the .old — which the next
+                # manager's _promote_orphaned_old renames back, so a
+                # complete checkpoint for this step survives every crash
+                # point (directories cannot be replaced atomically on
+                # POSIX, hence the demote/promote pair)
+                old = final + ".old"
+                if os.path.exists(old):
+                    shutil.rmtree(old)
+                os.rename(final, old)
             os.rename(tmp, final)
             self._gc()
+
+        def write_captured():
+            try:
+                write()
+            except BaseException as e:  # surfaces via wait()/next save()
+                self._async_error = e
 
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread = threading.Thread(target=write_captured, daemon=True)
             self._thread.start()
 
     def restore(self, step: int, template: Any, shardings: Any = None) -> Any:
@@ -168,7 +237,19 @@ class CheckpointManager:
             return None, None
         return step, self.restore(step, template, shardings)
 
+    def restore_flat_step(self, step: int) -> dict:
+        """Template-free dict restore of one step (see ``restore_flat``)."""
+        return restore_flat(self._step_dir(step))
+
     def _gc(self):
         steps = self.all_steps()
         for s in steps[: -self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        for name in os.listdir(self.root):
+            # stray .tmp dirs are crashed mid-write saves and .old dirs are
+            # demoted same-step predecessors: never valid checkpoints, never
+            # the one being written (writes serialize through wait(), and the
+            # current write's tmp/old were handled before _gc runs) — clean.
+            if name.endswith(".tmp") or name.endswith(".old"):
+                shutil.rmtree(os.path.join(self.root, name),
+                              ignore_errors=True)

@@ -1,0 +1,5 @@
+"""Cluster serving runtime: sharded router, replica hedging, WAL-durable
+mutations (DESIGN.md §7)."""
+from .replica import ReplicaDiverged, ReplicaKilled, ShardReplica  # noqa: F401
+from .router import ClusterConfig, ClusterRouter, ClusterUnavailable  # noqa: F401
+from .wal import OP_DELETE, OP_INSERT, WalRecord, WriteAheadLog  # noqa: F401

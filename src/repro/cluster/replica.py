@@ -1,0 +1,274 @@
+"""One shard replica: engine + WAL + snapshots (DESIGN.md §7).
+
+A replica owns a full copy of its shard — an ``AnnServingEngine`` over the
+shard's points — plus the two pieces that make it durable and replaceable:
+
+  * a :class:`~repro.cluster.wal.WriteAheadLog`: every mutation batch is
+    fsync'd to the log *before* it is applied to the engine, so an
+    acknowledged insert/delete survives a kill;
+  * a ``CheckpointManager`` snapshot, taken whenever applying a mutation
+    triggered a compaction (the index is then one flat segment — the
+    cheapest possible state to capture) and at explicit ``snapshot()``
+    calls.  The snapshot stores the raw shard rows + local gids +
+    ``next_gid`` + the WAL seq it covers; the hash-table state is NOT
+    stored — it is rebuilt deterministically from the shared params key,
+    which keeps snapshots small and restore elastic.
+
+Recovery (:meth:`ShardReplica.recover`) = restore the latest snapshot,
+rebuild the index, replay the WAL tail.  Because ``SegmentedIndex`` applies
+mutations deterministically (gid assignment is a counter; sealing points
+depend only on the order and sizes of inserts), replay reconstructs the
+replica's acknowledged state bit-identically — the determinism is *checked*
+on every replayed insert against the gids recorded at append time.
+
+A replica that was down while its peers kept acknowledging mutations has a
+WAL gap; :meth:`catch_up_from` closes it from a live peer — record-level
+when the peer still has the records, full state transfer when the peer
+already truncated them into a snapshot.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.core.index import IndexConfig, build_index
+from repro.core.segments import SegmentedIndex
+from repro.serve.engine import AnnServingEngine, ServeConfig
+
+from .wal import OP_DELETE, OP_INSERT, WalRecord, WriteAheadLog
+
+__all__ = ["ShardReplica", "ReplicaKilled", "ReplicaDiverged"]
+
+
+class ReplicaKilled(RuntimeError):
+    """Raised when a query/mutation reaches a dead replica."""
+
+
+class ReplicaDiverged(RuntimeError):
+    """Replay/apply produced different gids than the WAL recorded."""
+
+
+class ShardReplica:
+    """One replica of one shard; all replicas of a shard are bit-identical."""
+
+    def __init__(self, shard_id: int, replica_id: int, cfg: IndexConfig,
+                 serve_cfg: ServeConfig, key: jax.Array, root: str,
+                 seed_dataset: np.ndarray, keep_snapshots: int = 2,
+                 wal_fsync: bool = True):
+        self.shard_id = shard_id
+        self.replica_id = replica_id
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.key = key
+        self.root = root
+        self._wal_fsync = wal_fsync
+        os.makedirs(root, exist_ok=True)
+        self.ckpt = CheckpointManager(os.path.join(root, "ckpt"),
+                                      keep=keep_snapshots)
+        self.wal = WriteAheadLog(os.path.join(root, "wal.log"),
+                                 fsync=wal_fsync)
+        self.alive = True
+        self.last_seq = self.wal.last_seq
+        self.snapshots_taken = 0
+        # test/chaos seams driven by the router's failure-injection hooks
+        self.fail_next_queries = 0     # raise ReplicaKilled on next N queries
+        self.slow_ms = 0.0             # added latency per query batch
+        if self.ckpt.latest_step() is None and self.last_seq == 0:
+            # fresh replica: build from the seed slice and immediately take
+            # the base snapshot, so recovery ALWAYS has a snapshot to start
+            # from (the seed rows are not in the WAL).
+            self.engine = AnnServingEngine(
+                cfg, serve_cfg, dataset=jnp.asarray(seed_dataset), key=key)
+            self._last_snap_compactions = self.engine.index.compactions
+            self.snapshot()
+        else:
+            # directory already holds state (restart path): recover from it
+            self.engine = None
+            self.recover()
+
+    # -- mutation log + apply ---------------------------------------------
+
+    def log_and_apply(self, record: WalRecord) -> int:
+        """WRITE-ahead: fsync the record, then apply it.  Returns removed
+        count for deletes (insert returns 0)."""
+        if not self.alive:
+            raise ReplicaKilled(
+                f"shard {self.shard_id} replica {self.replica_id} is down")
+        self.wal.append_record(record)
+        return self._apply(record)
+
+    def _apply(self, record: WalRecord) -> int:
+        removed = 0
+        if record.op == OP_INSERT:
+            got = self.engine.insert(record.points)
+            if not np.array_equal(np.asarray(got, np.int32), record.gids):
+                raise ReplicaDiverged(
+                    f"shard {self.shard_id} replica {self.replica_id}: "
+                    f"insert assigned gids {got[:4]}… but the WAL recorded "
+                    f"{record.gids[:4]}… (seq {record.seq})")
+        elif record.op == OP_DELETE:
+            removed = self.engine.delete(record.gids)
+        else:
+            raise ValueError(f"unknown WAL op {record.op}")
+        self.last_seq = record.seq
+        if self.engine.index.compactions != self._last_snap_compactions:
+            # snapshot at compaction (DESIGN.md §7): the index is one flat
+            # segment right now, so the payload is minimal and the WAL
+            # prefix it covers can be truncated away.
+            self.snapshot()
+        return removed
+
+    # -- query -------------------------------------------------------------
+
+    def query(self, batch: np.ndarray, n_real: int):
+        """Serve one pre-padded batch (padded results; router slices).
+
+        Honors the chaos seams: a killed replica raises, an injected-slow
+        replica sleeps past the router's hedge deadline first.
+        """
+        if not self.alive:
+            raise ReplicaKilled(
+                f"shard {self.shard_id} replica {self.replica_id} is down")
+        if self.fail_next_queries > 0:
+            self.fail_next_queries -= 1
+            raise ReplicaKilled(
+                f"shard {self.shard_id} replica {self.replica_id}: "
+                "injected query failure")
+        if self.slow_ms > 0:
+            time.sleep(self.slow_ms / 1e3)
+        return self.engine.run_padded(batch, n_real)
+
+    # -- durability --------------------------------------------------------
+
+    def export_payload(self):
+        """(dataset rows, local gids, next_gid) covering every acknowledged
+        mutation — the snapshot payload AND the peer-state-transfer unit.
+
+        A shard that emptied out (delete-all + compact) has no segment to
+        checkpoint; the empty payload is still valid — ``next_gid`` must
+        survive so replay keeps assigning the same ids.
+        """
+        try:
+            state, gids, next_gid = self.engine.checkpoint_payload()
+            return (np.asarray(state.dataset, np.int32),
+                    np.asarray(gids, np.int32), int(next_gid))
+        except RuntimeError:
+            return (np.zeros((0, self.engine.index.dim), np.int32),
+                    np.zeros((0,), np.int32), self.engine.index.next_gid)
+
+    def snapshot(self) -> int:
+        """Checkpoint the engine state + WAL position; truncate the log.
+
+        Returns the snapshot step (== the WAL seq it covers).  A repeat
+        snapshot at the current seq (e.g. an explicit compact right after
+        an auto-snapshot) is a no-op: the existing snapshot already covers
+        the identical logical state, and rewriting it would only open an
+        overwrite window on the one file recovery depends on.
+        """
+        if self.ckpt.latest_step() == self.last_seq:
+            # (an empty ckpt dir reports latest_step() None, which never
+            # equals a seq, so the base snapshot always proceeds — the
+            # guard must not depend on in-memory counters like
+            # snapshots_taken, which reset to 0 on restart)
+            return self.last_seq
+        dataset, gids, next_gid = self.export_payload()
+        self.ckpt.save(self.last_seq, {
+            "dataset": dataset,
+            "gids": gids,
+            "next_gid": np.int32(next_gid),
+            "wal_seq": np.int64(self.last_seq),
+        })
+        self.wal.truncate_upto(self.last_seq)
+        self._last_snap_compactions = self.engine.index.compactions
+        self.snapshots_taken += 1
+        return self.last_seq
+
+    def kill(self) -> None:
+        """Simulate a process death: drop in-memory state, keep disk."""
+        self.alive = False
+        self.engine = None
+        self.wal.close()
+
+    def recover(self) -> int:
+        """Snapshot restore + WAL replay; returns #records replayed.
+
+        The rebuilt index is bit-identical in content to the killed
+        replica's acknowledged state: the snapshot rows are exact, the hash
+        tables are rebuilt from the same deterministic params key, and the
+        WAL tail replays the post-snapshot mutations in their original
+        order (gid assignment re-checked per record).
+        """
+        if getattr(self, "wal", None) is not None and not self.wal.closed:
+            # died without kill() (health markdown / failed mutation): the
+            # old append handle is still open — close it or every
+            # markdown->recover cycle leaks an fd
+            self.wal.close()
+        self.wal = WriteAheadLog(os.path.join(self.root, "wal.log"),
+                                 fsync=self._wal_fsync)
+        step = self.ckpt.latest_step()
+        if step is None:
+            raise RuntimeError(
+                f"shard {self.shard_id} replica {self.replica_id}: no "
+                "snapshot to recover from (base snapshot missing)")
+        snap = self.ckpt.restore_flat_step(step)
+        dataset = jnp.asarray(snap["dataset"])
+        state = build_index(self.cfg, self.key, dataset)
+        index = SegmentedIndex.from_checkpoint(
+            self.cfg, state, jnp.asarray(snap["gids"]),
+            int(snap["next_gid"]), delta_cap=self.serve_cfg.delta_cap)
+        self.engine = AnnServingEngine(self.cfg, self.serve_cfg, index=index)
+        self._last_snap_compactions = self.engine.index.compactions
+        self.last_seq = int(snap["wal_seq"])
+        replayed = 0
+        for rec in self.wal.records(after_seq=self.last_seq):
+            self._apply(rec)
+            replayed += 1
+        self.alive = True
+        # a restarted process does not inherit injected chaos
+        self.fail_next_queries = 0
+        self.slow_ms = 0.0
+        return replayed
+
+    def catch_up_from(self, peer: "ShardReplica") -> int:
+        """Close the WAL gap against a live peer; returns #records applied.
+
+        Mutations acknowledged while this replica was down never reached
+        its WAL.  If the peer still has the missing records (its WAL starts
+        at or before our ``last_seq + 1``), they are appended to our WAL
+        (seq preserved) and applied — the cheap path.  If the peer already
+        truncated them into a snapshot, fall back to a full state transfer
+        from the peer's engine.
+        """
+        if peer.last_seq <= self.last_seq:
+            return 0
+        missing = peer.wal.records(after_seq=self.last_seq)
+        have = {r.seq for r in missing}
+        if all(s in have for s in range(self.last_seq + 1,
+                                        peer.last_seq + 1)):
+            for rec in missing:
+                self.wal.append_record(rec)
+                self._apply(rec)
+            return len(missing)
+        # gap truncated away on the peer: full state transfer (payload, not
+        # IndexState — survives an emptied shard and rebuilds hash tables
+        # from the shared params key, exactly like recover())
+        gap = peer.last_seq - self.last_seq
+        dataset, gids, next_gid = peer.export_payload()
+        state = build_index(self.cfg, self.key, jnp.asarray(dataset))
+        index = SegmentedIndex.from_checkpoint(
+            self.cfg, state, jnp.asarray(gids), next_gid,
+            delta_cap=self.serve_cfg.delta_cap)
+        self.engine = AnnServingEngine(self.cfg, self.serve_cfg, index=index)
+        self.last_seq = peer.last_seq
+        self._last_snap_compactions = self.engine.index.compactions
+        self.snapshot()                # own durable base at the new seq
+        return gap
+
+    def close(self) -> None:
+        self.wal.close()

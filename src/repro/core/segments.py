@@ -205,6 +205,11 @@ class SegmentedIndex:
     def num_tombstones(self) -> int:
         return len(self._tombstones)
 
+    @property
+    def next_gid(self) -> int:
+        """The gid the next insert will receive (durable in checkpoints)."""
+        return self._next_gid
+
     # -- mutations --------------------------------------------------------
 
     def insert(self, points) -> np.ndarray:

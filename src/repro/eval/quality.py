@@ -13,9 +13,11 @@ under a shared exact-GT protocol):
     CP/MP table-count ratio;
   * doubles as a **cross-layer consistency oracle**: the same config is
     pushed through ``query_index`` (flat), ``SegmentedIndex.query``
-    (fresh, mutated, and mutated-then-compacted), and the
-    ``dist_query_fn`` all-gather path, asserting the quality the curves
-    report is the quality every serving layer actually delivers.
+    (fresh, mutated, and mutated-then-compacted), the ``dist_query_fn``
+    all-gather path, and the sharded+replicated ``ClusterRouter``
+    (including after a replica kill + WAL-replay recovery), asserting the
+    quality the curves report is the quality every serving layer actually
+    delivers.
 
 ``benchmarks/quality_bench.py`` drives this module and persists
 ``BENCH_quality.json``; DESIGN.md §6 documents the protocol.
@@ -23,6 +25,7 @@ under a shared exact-GT protocol):
 from __future__ import annotations
 
 import dataclasses
+import tempfile
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -284,6 +287,70 @@ class QualityRun:
                 mutated["recall"] >= compacted["recall"],
         }
 
+    def check_cluster(self, cfg: IndexConfig,
+                      num_shards: int = 2, num_replicas: int = 2,
+                      root_dir: Optional[str] = None) -> dict:
+        """Cluster-path oracle (DESIGN.md §7): the sharded+replicated
+        ``ClusterRouter`` == flat ``query_index``, bit-for-bit — before AND
+        after a replica kill + WAL-replay recovery (the recovered replica
+        is forced to serve by killing its peer).
+
+        Bit-identity between a sharded and a flat index requires the
+        candidate gather to be non-truncating (a shard examines its own
+        ``candidate_cap`` per probed bucket, so a binding cap makes the
+        cluster examine a *superset* — recall can only improve, but bits
+        may differ).  The oracle therefore raises the cap to the max
+        bucket occupancy of the built index, where per-shard candidate
+        sets union to exactly the flat set and the ``topk_merge`` fold
+        must reproduce the flat top-k bits.
+        """
+        from repro.cluster import ClusterConfig, ClusterRouter
+        from repro.serve.engine import ServeConfig
+
+        state = build_index(cfg, self.key, self.data)
+        # max run of equal bucket keys over all tables == the occupancy a
+        # non-truncating gather must cover (cap is not a build parameter,
+        # so the state is reusable under the raised-cap config)
+        keys = np.asarray(state.sorted_keys)
+        max_bucket = max(int(np.unique(t, return_counts=True)[1].max())
+                         for t in keys) if keys.size else 1
+        cfg = dataclasses.replace(
+            cfg, candidate_cap=max(cfg.candidate_cap, max_bucket))
+        fd, fi = map(np.asarray, query_index(cfg, state, self.queries))
+        with tempfile.TemporaryDirectory(dir=root_dir) as root:
+            router = ClusterRouter(
+                cfg, ServeConfig(batch_size=32),
+                ClusterConfig(num_shards=num_shards,
+                              num_replicas=num_replicas,
+                              hedge_ms=60000.0,  # oracle: never hedge on a
+                              wal_fsync=False),  # cold compile
+                np.asarray(self.data), root, key=self.key)
+            cd, ci = router.query(np.asarray(self.queries))
+            matches = bool(np.array_equal(cd, fd) and np.array_equal(ci, fi))
+            # WAL some mutations through, kill a replica, recover it, then
+            # make it serve (peer killed): still flat-identical on the
+            # original points (inserted probes are deleted again before the
+            # check, exercising insert+delete+replay in one pass).
+            probes = np.asarray(self.queries[:4], np.int32)
+            gids = router.insert(probes)
+            router.kill_replica(0, 0)
+            router.delete(gids)
+            router.recover_replica(0, 0)
+            router.kill_replica(0, min(1, num_replicas - 1))
+            rd, ri = router.query(np.asarray(self.queries))
+            recovered = bool(np.array_equal(rd, fd)
+                             and np.array_equal(ri, fi))
+            summary = router.summary()
+            router.close()
+        return {
+            "cluster_matches_flat": matches,
+            "cluster_recovery_matches_flat": recovered,
+            "cluster_shards": num_shards,
+            "cluster_replicas": num_replicas,
+            "cluster_recoveries": summary["recoveries"],
+            "cluster_oracle_cap": cfg.candidate_cap,
+        }
+
     def check_distributed(self, cfg: IndexConfig, flat=None) -> dict:
         """Distributed-path oracle: all-gather shard_map == flat, bit-for-bit
         (single row shard; queries sharded over 'model').  ``flat`` may pass
@@ -297,9 +364,12 @@ class QualityRun:
                 and np.array_equal(np.asarray(di_), np.asarray(fi))),
         }
 
-    def check_cross_layer(self, cfg: IndexConfig) -> dict:
+    def check_cross_layer(self, cfg: IndexConfig,
+                          cluster: bool = True) -> dict:
         """All oracle layers for one config; every flag must be True/hold."""
-        flat = self.query_flat(cfg)  # shared by both checks (one build)
+        flat = self.query_flat(cfg)  # shared by all checks (one build)
         out = self.check_segmented(cfg, flat=flat)
         out.update(self.check_distributed(cfg, flat=flat))
+        if cluster:
+            out.update(self.check_cluster(cfg))
         return out

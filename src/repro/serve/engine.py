@@ -18,10 +18,12 @@ Production posture on a single process:
   * queries probe every segment with the staged pipeline and fold the
     per-segment top-k lists with the same bitonic ``topk_merge`` kernel
     the distributed ring merge uses;
-  * per-batch deadline timing + straggler hedging hook: if a shard's partial
-    result misses the hedge deadline, the engine re-issues the probe batch to
-    the replica group (single-process: recorded, not exercised — see
-    DESIGN.md Sect. 4);
+  * per-batch deadline timing + straggler hedging hook: if a batch misses
+    the hedge deadline the event is recorded in ``stats['hedges']``; the
+    cluster runtime (``repro.cluster``, DESIGN.md §7) turns this into a real
+    re-issue — a slow/dead replica's batch goes to a peer and the first
+    complete result wins.  ``run_padded``/``query_batch`` are the seams the
+    replica layer drives;
   * index checkpoint/restore via repro.ckpt (a serving node can be replaced
     and re-load the shard it owns);
   * exact L1 rerank guarantees results are exact over probed candidates.
@@ -63,10 +65,21 @@ class AnnServingEngine:
     """Single-shard engine; the distributed variant wraps dist_query_fn."""
 
     def __init__(self, cfg: IndexConfig, serve_cfg: ServeConfig,
-                 dataset: jax.Array, key: Optional[jax.Array] = None):
+                 dataset: Optional[jax.Array] = None,
+                 key: Optional[jax.Array] = None,
+                 index: Optional[SegmentedIndex] = None):
+        """``dataset`` seeds a fresh index; ``index`` adopts an existing one
+        (the cluster recovery path rebuilds a ``SegmentedIndex`` from a
+        snapshot + WAL replay and hands it in — autotuning is skipped, the
+        index is served as reconstructed)."""
+        if (dataset is None) == (index is None):
+            raise ValueError("pass exactly one of dataset= or index=")
         self.serve_cfg = serve_cfg
         key = key if key is not None else jax.random.PRNGKey(0)
         self.autotune = None
+        if index is not None:
+            serve_cfg = dataclasses.replace(serve_cfg, target_recall=None)
+            self.serve_cfg = serve_cfg
         if serve_cfg.target_recall is not None and dataset.shape[0] > 0:
             # Quality is a first-class config input: derive (L, T, cap) from
             # the analytical success model + a calibration split, then serve
@@ -81,7 +94,9 @@ class AnnServingEngine:
                 num_calib=serve_cfg.autotune_calib)
             cfg = self.autotune.cfg
         self.cfg = cfg
-        if self.autotune is not None and self.autotune.state is not None:
+        if index is not None:
+            self.index = index
+        elif self.autotune is not None and self.autotune.state is not None:
             # The tuner already built and validated exactly this index
             # (same cfg/key/dataset); seed the segment from it instead of
             # re-hashing and re-sorting the whole dataset.
@@ -93,7 +108,7 @@ class AnnServingEngine:
         else:
             self.index = SegmentedIndex.from_dataset(
                 cfg, key, dataset, delta_cap=serve_cfg.delta_cap)
-        self._dim = dataset.shape[1]
+        self._dim = self.index.dim
         self._pending: List[np.ndarray] = []
         self.stats = {"batches": 0, "queries": 0, "hedges": 0,
                       "inserts": 0, "deletes": 0, "bucket_cold_hits": 0,
@@ -118,7 +133,9 @@ class AnnServingEngine:
         out.append(self.serve_cfg.batch_size)
         return out
 
-    def _bucket_for(self, q: int) -> int:
+    def bucket_for(self, q: int) -> int:
+        """Padded shape a q-row batch dispatches at (router reuses this so
+        its fan-out batches land on shapes every replica has compiled)."""
         for b in self.buckets():
             if q <= b:
                 return b
@@ -225,9 +242,30 @@ class AnnServingEngine:
 
     # -- query path --------------------------------------------------------
 
+    def _validate_queries(self, queries) -> np.ndarray:
+        """Normalize to (Q, dim) int32, failing *now* with a clear message.
+
+        Without this, a wrong-dim or float query is accepted silently and
+        only blows up batches later inside ``np.stack``/``np.concatenate``
+        (possibly poisoning a batch that mixes it with valid requests).
+        """
+        arr = np.atleast_2d(np.asarray(queries))
+        if arr.ndim != 2:
+            raise ValueError(
+                f"queries must be (dim,) or (Q, dim); got shape {arr.shape}")
+        if arr.shape[1] != self._dim:
+            raise ValueError(
+                f"query dim {arr.shape[1]} != index dim {self._dim} "
+                f"(shape {arr.shape})")
+        if not np.can_cast(arr.dtype, np.int32, casting="same_kind"):
+            raise TypeError(
+                f"queries must be integer-typed (castable to int32); got "
+                f"dtype {arr.dtype}")
+        return arr.astype(np.int32, copy=False)
+
     def submit(self, queries: np.ndarray) -> None:
-        for q in np.atleast_2d(queries):
-            self._pending.append(q.astype(np.int32))
+        for q in self._validate_queries(queries):
+            self._pending.append(q)
 
     def _next_batch(self) -> Optional[Tuple[np.ndarray, int]]:
         if not self._pending:
@@ -235,11 +273,76 @@ class AnnServingEngine:
         take = self._pending[:self.serve_cfg.batch_size]
         self._pending = self._pending[len(take):]
         batch = np.stack(take)
-        bucket = self._bucket_for(len(take))
+        bucket = self.bucket_for(len(take))
         if batch.shape[0] < bucket:  # pad to the bucket's compiled shape
             pad = np.zeros((bucket - batch.shape[0], self._dim), np.int32)
             batch = np.concatenate([batch, pad])
         return batch, len(take)
+
+    def _run_batch(self, batch: np.ndarray, n_real: int,
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Run one already-padded batch; returns PADDED (B, k) results.
+
+        Single place for the warm/cold bookkeeping, latency stats, and the
+        hedge-deadline check — ``drain`` and the cluster replica seam
+        (``run_padded``) both land here, so their metrics agree.
+        """
+        key = (batch.shape[0], self._index_signature())
+        if key not in self._warm:
+            self.stats["bucket_cold_hits"] += 1
+            self._warm.add(key)
+        t0 = time.perf_counter()
+        d, i = self.index.query(jnp.asarray(batch))
+        d.block_until_ready()
+        ms = (time.perf_counter() - t0) * 1e3
+        if ms > self.serve_cfg.hedge_ms:
+            # hedge deadline missed: recorded here; the cluster router
+            # additionally re-issues the batch to a peer replica (§7).
+            self.stats["hedges"] += 1
+        self.stats["batches"] += 1
+        self.stats["queries"] += n_real
+        self.stats["total_ms"] += ms
+        self.stats["batch_ms"].append(ms)
+        return np.asarray(d), np.asarray(i)
+
+    def run_padded(self, batch: np.ndarray, n_real: int,
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Cluster replica seam: serve one pre-padded batch, padded results.
+
+        The router pads a fan-out batch ONCE to the shared bucket shape and
+        every replica serves that exact shape — replicas reuse each other's
+        compiled executables (same jit cache key) and the cross-shard merge
+        sees one static shape.  Lazily re-warms like ``drain``.
+        """
+        if self.serve_cfg.warm_buckets:
+            self.warmup()
+        return self._run_batch(np.asarray(batch, np.int32), n_real)
+
+    def query_batch(self, queries) -> Tuple[np.ndarray, np.ndarray]:
+        """Synchronous one-shot query path (no pending-queue round trip).
+
+        Validates, chunks to ``batch_size``, pads each chunk to its shape
+        bucket, and returns unpadded ``(Q, k)`` dists/gids.  The single-node
+        mirror the cluster consistency oracle compares against.
+        """
+        q = self._validate_queries(queries)
+        if q.shape[0] == 0:
+            return (np.zeros((0, self.cfg.k), np.int32),
+                    np.zeros((0, self.cfg.k), np.int32))
+        if self.serve_cfg.warm_buckets:
+            self.warmup()
+        out_d, out_i = [], []
+        for lo in range(0, q.shape[0], self.serve_cfg.batch_size):
+            chunk = q[lo: lo + self.serve_cfg.batch_size]
+            n = chunk.shape[0]
+            bucket = self.bucket_for(n)
+            if n < bucket:
+                pad = np.zeros((bucket - n, self._dim), np.int32)
+                chunk = np.concatenate([chunk, pad])
+            d, i = self._run_batch(chunk, n)
+            out_d.append(d[:n])
+            out_i.append(i[:n])
+        return np.concatenate(out_d), np.concatenate(out_i)
 
     def drain(self) -> Tuple[np.ndarray, np.ndarray]:
         """Process all pending requests; returns (dists (B,k) int32 asc,
@@ -258,24 +361,9 @@ class AnnServingEngine:
             if nb is None:
                 break
             batch, n_real = nb
-            key = (batch.shape[0], self._index_signature())
-            if key not in self._warm:
-                self.stats["bucket_cold_hits"] += 1
-                self._warm.add(key)
-            t0 = time.perf_counter()
-            d, i = self.index.query(jnp.asarray(batch))
-            d.block_until_ready()
-            ms = (time.perf_counter() - t0) * 1e3
-            if ms > self.serve_cfg.hedge_ms:
-                # hedging hook: in the multi-replica deployment this re-issues
-                # to the replica group; single-process we record the event.
-                self.stats["hedges"] += 1
-            self.stats["batches"] += 1
-            self.stats["queries"] += n_real
-            self.stats["total_ms"] += ms
-            self.stats["batch_ms"].append(ms)
-            out_d.append(np.asarray(d)[:n_real])
-            out_i.append(np.asarray(i)[:n_real])
+            d, i = self._run_batch(batch, n_real)
+            out_d.append(d[:n_real])
+            out_i.append(i[:n_real])
         self._maybe_compact()
         if not out_d:
             # Same dtypes as the non-empty path (int32 dists/ids): callers

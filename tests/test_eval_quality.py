@@ -140,6 +140,18 @@ def test_distributed_oracle_bit_identical(run):
     assert out["dist_matches_flat"]
 
 
+def test_cluster_oracle_bit_identical_incl_recovery(run, tmp_path):
+    """ISSUE 4 acceptance: ClusterRouter (S=2, R=2) == flat query_index
+    bit-for-bit, including after a replica kill + WAL-replay recovery."""
+    cfg = run.scheme_config("mp-rw-lsh", 2, 30)
+    out = run.check_cluster(cfg, root_dir=str(tmp_path))
+    assert out["cluster_matches_flat"]
+    assert out["cluster_recovery_matches_flat"]
+    assert out["cluster_recoveries"] == 1
+    # the oracle's cap raise really is non-truncating (>= the sweep cap)
+    assert out["cluster_oracle_cap"] >= cfg.candidate_cap
+
+
 # ---------------------------------------------------------------------------
 # Autotuner
 # ---------------------------------------------------------------------------
