@@ -5,51 +5,63 @@ shows the structural rule our harness uses instead: the raw-hash difference
 std at the near radius is sqrt(d1) (random-walk CLT, paper Sect. 3.1), so
 recall peaks when W is a small multiple of sqrt(dbar1) — we sweep the
 multiple c in W = c*sqrt(dbar1).
+
+Ported to the staged-pipeline quality harness: ``eval.quality.QualityRun``
+supplies the shared ground truth and dbar1, and each width is scored
+through the same ``scheme_config``/``eval_config`` path the quality bench
+uses.  ``--smoke`` shrinks the dataset for the CI rot guard.
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as bl
-from repro.core.index import IndexConfig, build_index, query_index
 from repro.data import ann_synthetic as ds
+from repro.eval.quality import QualityRun, QualitySpec
 
 
-def run(k: int = 10, n_queries: int = 48):
-    spec = ds.DatasetSpec("ablate", n=16384, dim=64, universe=256,
-                          num_clusters=24, seed=5)
+def run(smoke: bool = False):
+    if smoke:
+        spec = ds.DatasetSpec("ablate-smoke", n=4096, dim=32, universe=128,
+                              num_clusters=12, seed=5)
+        n_queries, tables, probes, cap = 24, 4, 60, 48
+    else:
+        spec = ds.DatasetSpec("ablate", n=16384, dim=64, universe=256,
+                              num_clusters=24, seed=5)
+        n_queries, tables, probes, cap = 48, 6, 150, 96
     data = jnp.asarray(ds.make_dataset(spec))
     queries = jnp.asarray(ds.make_queries(spec, np.asarray(data), n_queries))
-    td, ti = bl.brute_force_l1(data, queries, k)
-    ti = np.asarray(ti)
-    dbar = float(np.asarray(td, np.float64).mean())
-    root = np.sqrt(dbar)
+    qrun = QualityRun(data, queries, spec.universe,
+                      QualitySpec(k=10, candidate_cap=cap,
+                                  rerank_chunk=1024))
+    base = qrun.scheme_config("mp-rw-lsh", tables, probes)
+    root = np.sqrt(qrun.dbar)
     rows = []
     for c in (1.0, 2.0, 3.0, 4.0, 6.0, 10.0):
         w = max(8, int(c * root) & ~1)
-        cfg = IndexConfig(num_tables=6, num_hashes=12, width=w, num_probes=150,
-                          candidate_cap=96, universe=spec.universe, k=k,
-                          rerank_chunk=1024)
-        st = build_index(cfg, jax.random.PRNGKey(0), data)
-        _, i = query_index(cfg, st, queries)
-        rows.append((c, w, bl.recall(np.asarray(i), ti)))
-    return dbar, rows
+        rec = qrun.eval_config(dataclasses.replace(base, width=w))
+        rows.append((c, w, rec["recall"]))
+    return qrun.dbar, rows
 
 
-def main():
+def main(smoke: bool = False):
     t0 = time.time()
-    dbar, rows = run()
+    dbar, rows = run(smoke)
     us = (time.time() - t0) * 1e6
     best = max(rows, key=lambda r: r[2])
     print("name,us_per_call,derived")
-    print(f"ablation_width,{us:.0f},dbar1={dbar:.0f};best_c={best[0]};best_recall={best[2]:.3f}")
+    print(f"ablation_width,{us:.0f},dbar1={dbar:.0f};best_c={best[0]};"
+          f"best_recall={best[2]:.3f}")
     for c, w, r in rows:
         print(f"#  c={c:4.1f} W={w:4d} recall={r:.4f}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small dataset for the CI rot guard")
+    main(**vars(ap.parse_args()))

@@ -1,76 +1,74 @@
 """Paper Fig. 2: number of hash tables vs recall (MP-RW vs RW vs CP).
 
 The paper's claim: at matched recall, CP-LSH / RW-LSH need 14-28x more hash
-tables than MP-RW-LSH.  We sweep L for each algorithm on a GloVe-shaped
-synthetic dataset and report the table-count ratio at the highest recall
-MP-RW reaches with L=4..8.
+tables than MP-RW-LSH.  Ported to the staged-pipeline quality harness
+(``eval.quality.QualityRun``): one shared exact L1 ground truth, per-scheme
+``num_tables`` sweeps via the same ``IndexConfig``/``query_index`` path the
+serving layers compose, and the headline table-count ratio from
+``QualityRun.table_claim``.  ``--smoke`` shrinks the dataset for the CI
+guard (benchmarks must at least run end to end so they cannot silently rot).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as bl
-from repro.core.index import IndexConfig, build_index, query_index
 from repro.data import ann_synthetic as ds
+from repro.eval.quality import QualityRun, QualitySpec
 
 
-def run(n_queries=48, k=10):
-    spec = ds.DatasetSpec("fig2", n=32768, dim=100, universe=512,
-                          num_clusters=48, seed=2)
+def run(smoke: bool = False):
+    if smoke:
+        spec = ds.DatasetSpec("fig2-smoke", n=4096, dim=32, universe=128,
+                              num_clusters=12, seed=2)
+        qspec = QualitySpec(k=10, table_sweep=(1, 2, 4, 8),
+                            table_sweep_single=(4, 8, 16, 32),
+                            probe_sweep=(60,), candidate_cap=32,
+                            rerank_chunk=256)
+        n_queries = 24
+    else:
+        spec = ds.DatasetSpec("fig2", n=32768, dim=100, universe=512,
+                              num_clusters=48, seed=2)
+        qspec = QualitySpec(k=10, table_sweep=(1, 2, 4, 8),
+                            table_sweep_single=(8, 16, 32, 64),
+                            probe_sweep=(150,), candidate_cap=64,
+                            rerank_chunk=1024)
+        n_queries = 48
     data = jnp.asarray(ds.make_dataset(spec))
     queries = jnp.asarray(ds.make_queries(spec, np.asarray(data), n_queries))
-    _, ti = bl.brute_force_l1(data, queries, k)
-    ti = np.asarray(ti)
-
-    def recall_at(cfg):
-        st = build_index(cfg, jax.random.PRNGKey(0), data)
-        _, i = query_index(cfg, st, queries)
-        return bl.recall(np.asarray(i), ti)
-
-    curves = {"mp-rw-lsh": [], "rw-lsh": [], "cp-lsh": []}
-    for l in (1, 2, 4, 8):
-        cfg = IndexConfig(num_tables=l, num_hashes=12, width=256, num_probes=150,
-                          candidate_cap=64, universe=512, k=k, rerank_chunk=1024)
-        curves["mp-rw-lsh"].append((l, recall_at(cfg)))
-    for l in (8, 16, 32, 64):
-        cfg = IndexConfig(num_tables=l, num_hashes=12, width=256, num_probes=0,
-                          candidate_cap=64, universe=512, k=k, rerank_chunk=1024)
-        curves["rw-lsh"].append((l, recall_at(cfg)))
-        cfgc = IndexConfig(num_tables=l, num_hashes=8, width=40960, num_probes=0,
-                           candidate_cap=64, universe=512, family="cauchy",
-                           k=k, rerank_chunk=1024)
-        curves["cp-lsh"].append((l, recall_at(cfgc)))
-    return curves
+    qrun = QualityRun(data, queries, spec.universe, qspec)
+    records = qrun.sweep(schemes=("mp-rw-lsh", "rw-lsh", "cp-lsh"))
+    # match the original script's target: ~the best recall MP-RW reaches
+    mp_best = max(r["recall"] for r in records if r["scheme"] == "mp-rw-lsh")
+    claim = qrun.table_claim(records, target=mp_best * 0.98)
+    return records, claim
 
 
-def tables_needed(curve, target):
-    for l, r in curve:
-        if r >= target:
-            return l
-    return None
-
-
-def main():
+def main(smoke: bool = False):
     t0 = time.time()
-    curves = run()
+    records, claim = run(smoke)
     us = (time.time() - t0) * 1e6
-    target = curves["mp-rw-lsh"][-1][1] * 0.98
-    l_mp = tables_needed(curves["mp-rw-lsh"], target)
-    l_rw = tables_needed(curves["rw-lsh"], target)
-    l_cp = tables_needed(curves["cp-lsh"], target)
-    def ratio(x):
-        return "n/a(>64)" if x is None else f"{x / l_mp:.1f}x"
+    needed, ratios = claim["tables_needed"], claim["ratio_vs_mp_rw"]
+
+    def ratio(s):
+        r = ratios.get(s)
+        return f"{r:.1f}x" if r else f"n/a(>{claim['sweep_max_tables']})"
+
     print("name,us_per_call,derived")
     print(f"fig2_tables_vs_recall,{us:.0f},"
-          f"target_recall={target:.3f};L_mp={l_mp};rw_ratio={ratio(l_rw)};cp_ratio={ratio(l_cp)}")
-    for algo, pts in curves.items():
-        for l, r in pts:
-            print(f"#  {algo:10s} L={l:3d} recall={r:.4f}")
+          f"target_recall={claim['target_recall']:.3f};"
+          f"L_mp={needed.get('mp-rw-lsh')};"
+          f"rw_ratio={ratio('rw-lsh')};cp_ratio={ratio('cp-lsh')}")
+    for r in records:
+        print(f"#  {r['scheme']:10s} L={r['num_tables']:3d} "
+              f"recall={r['recall']:.4f}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small dataset for the CI rot guard")
+    main(**vars(ap.parse_args()))

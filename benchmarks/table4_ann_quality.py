@@ -3,95 +3,76 @@ MP-RW-LSH vs CP-LSH vs RW-LSH vs SRS on synthetic stand-ins of the paper's
 datasets (network-isolated container; same (dim, U) and cluster structure,
 n scaled to CPU — DESIGN.md Sect. 2).
 
-Index size follows the paper's accounting: hash tables store one (key, id)
-pair per point per table (8 bytes) [+ the fixed per-table head-cell cost the
-paper *excludes*; we exclude it too], SRS stores M floats per point.
+Ported to the staged-pipeline quality harness: per dataset one
+``eval.quality.QualityRun`` owns the shared exact ground truth, per-dataset
+width tuning (W_rw ~ c*sqrt(dbar1), W_cp ~ c*dbar1 — the harness's rule),
+and timed ``query_index`` evaluation.  Index size follows the paper's
+accounting: hash tables store one (key, id) pair per point per table
+(8 bytes); SRS stores M floats per point.  ``--smoke`` shrinks every
+dataset for the CI rot guard.
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as bl
-from repro.core.index import IndexConfig, build_index, query_index
+from repro.core.index import IndexConfig
 from repro.data import ann_synthetic as ds
+from repro.eval.quality import QualityRun, QualitySpec
+
 
 def _index_size_mb(cfg: IndexConfig, n: int) -> float:
     return cfg.num_tables * n * 8 / 1e6
 
 
-def tune_widths(data, queries, k):
-    """Per-dataset tuning like the paper's: W_rw ~ c*sqrt(dbar1) (raw-hash
-    std at the near radius is sqrt(d1)); W_cp ~ c*dbar1 (Cauchy scale IS d1).
-    dbar1 = measured mean k-NN distance on a query sample."""
-    td, _ = bl.brute_force_l1(data, queries[:16], k)
-    dbar = float(np.asarray(td, np.float64).mean())
-    w_rw = max(8, int(3.0 * np.sqrt(dbar)) & ~1)
-    w_cp = max(8, int(4.0 * dbar))
-    return w_rw, w_cp, dbar
-
-
-def run(names=("glove", "deep10m"), n_queries=64, k=10, runs=1):
+def run(names=("glove", "deep10m"), n_queries=64, smoke: bool = False):
     rows = []
     for name in names:
         spec = ds.PAPER_DATASETS[name]
+        if smoke:
+            spec = dataclasses.replace(
+                spec, name=f"{spec.name}-smoke", n=min(spec.n, 4096))
         data = jnp.asarray(ds.make_dataset(spec))
-        queries = jnp.asarray(ds.make_queries(spec, np.asarray(data), n_queries))
-        td, ti = bl.brute_force_l1(data, queries, k)
-        td, ti = np.asarray(td), np.asarray(ti)
-        w_rw, w_cp, dbar = tune_widths(data, queries, k)
+        queries = jnp.asarray(
+            ds.make_queries(spec, np.asarray(data), n_queries))
+        qspec = QualitySpec(k=10, candidate_cap=64 if smoke else 128,
+                            num_hashes_rw=12, num_hashes_cp=8,
+                            rerank_chunk=1024)
+        qrun = QualityRun(data, queries, spec.universe, qspec)
 
-        def timed(fn):
-            fn()  # compile
-            t0 = time.perf_counter()
-            out = fn()
-            jax.tree.leaves(out)[0].block_until_ready()
-            return out, (time.perf_counter() - t0) * 1e3 / n_queries
-
-        variants = {}
-        base = IndexConfig(num_tables=8, num_hashes=12, width=w_rw,
-                           num_probes=200, candidate_cap=128,
-                           universe=spec.universe, k=k, rerank_chunk=1024)
-        st = build_index(base, jax.random.PRNGKey(0), data)
-        variants["mp-rw-lsh"] = (base, st)
-        sp = bl.single_probe_config(base)
-        sp = IndexConfig(**{**sp.__dict__, "num_tables": 48})
-        variants["rw-lsh"] = (sp, build_index(sp, jax.random.PRNGKey(0), data))
-        cp = IndexConfig(num_tables=48, num_hashes=8, width=w_cp, num_probes=0,
-                         candidate_cap=128, universe=spec.universe,
-                         family="cauchy", k=k, rerank_chunk=1024)
-        variants["cp-lsh"] = (cp, build_index(cp, jax.random.PRNGKey(0), data))
-
-        for algo, (cfg, state) in variants.items():
-            (d, i), ms = timed(lambda: query_index(cfg, state, queries))
+        variants = {
+            "mp-rw-lsh": qrun.scheme_config(
+                "mp-rw-lsh", 8, 60 if smoke else 200),
+            "rw-lsh": qrun.scheme_config("rw-lsh", 16 if smoke else 48),
+            "cp-lsh": qrun.scheme_config("cp-lsh", 16 if smoke else 48),
+        }
+        for algo, cfg in variants.items():
+            rec = qrun.eval_config(cfg, timed=True)
             rows.append({
                 "dataset": name, "algo": algo,
-                "recall": bl.recall(np.asarray(i), ti),
-                "ratio": bl.overall_ratio(np.asarray(d), td),
-                "ms_per_query": ms,
+                "recall": rec["recall"], "ratio": rec["ratio"],
+                "ms_per_query": rec["ms_per_query"],
                 "index_mb": _index_size_mb(cfg, data.shape[0]),
                 "tables": cfg.num_tables,
             })
-        # SRS
-        srs = bl.build_srs(jax.random.PRNGKey(1), data, 10)
-        (d, i), ms = timed(lambda: bl.query_srs(srs, queries, 1024, k))
+        rec = qrun.eval_srs(timed=True)
         rows.append({
             "dataset": name, "algo": "srs",
-            "recall": bl.recall(np.asarray(i), ti),
-            "ratio": bl.overall_ratio(np.asarray(d), td),
-            "ms_per_query": ms,
-            "index_mb": data.shape[0] * 10 * 4 / 1e6,
+            "recall": rec["recall"], "ratio": rec["ratio"],
+            "ms_per_query": rec["ms_per_query"],
+            "index_mb": data.shape[0] * qspec.srs_proj * 4 / 1e6,
             "tables": 0,
         })
     return rows
 
 
-def main():
+def main(smoke: bool = False):
     t0 = time.time()
-    rows = run()
+    rows = run(smoke=smoke)
     us = (time.time() - t0) * 1e6 / max(len(rows), 1)
     mp = [r for r in rows if r["algo"] == "mp-rw-lsh"]
     oth = [r for r in rows if r["algo"] in ("rw-lsh", "cp-lsh")]
@@ -100,10 +81,14 @@ def main():
     print("name,us_per_call,derived")
     print(f"table4_ann_quality,{us:.0f},index_size_reduction={ratio:.1f}x")
     for r in rows:
-        print(f"#  {r['dataset']:8s} {r['algo']:10s} recall={r['recall']:.4f} "
-              f"ratio={r['ratio']:.4f} {r['ms_per_query']:.2f}ms/q "
-              f"index={r['index_mb']:.1f}MB L={r['tables']}")
+        print(f"#  {r['dataset']:8s} {r['algo']:10s} "
+              f"recall={r['recall']:.4f} ratio={r['ratio']:.4f} "
+              f"{r['ms_per_query']:.2f}ms/q index={r['index_mb']:.1f}MB "
+              f"L={r['tables']}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small datasets for the CI rot guard")
+    main(**vars(ap.parse_args()))

@@ -641,6 +641,17 @@ class ClusterRouter:
                                   if not rep.wal.closed else None),
                     "num_live": (rep.engine.index.num_live
                                  if rep.alive else None),
+                    # unplanned (batch x candidate)-bucket compiles on the
+                    # replica (should stay flat after warmup; a hedge storm
+                    # with cold buckets shows up here) + the candidate
+                    # buckets its compacted probe actually served at
+                    "bucket_cold_hits": (
+                        rep.engine.stats["bucket_cold_hits"]
+                        if rep.alive else None),
+                    "cand_buckets": (
+                        dict(sorted(
+                            rep.engine.stats["cand_buckets"].items()))
+                        if rep.alive else None),
                 } for rep in group],
             })
         return {

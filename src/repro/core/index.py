@@ -29,7 +29,9 @@ from . import multiprobe as mp_lib
 from . import pipeline as pipe
 from .pipeline import l1_distance_chunked  # re-export (legacy import path)
 
-__all__ = ["IndexConfig", "IndexState", "build_index", "query_index", "l1_distance_chunked"]
+__all__ = ["IndexConfig", "IndexState", "build_index", "query_index",
+           "probe_index", "finish_index", "query_index_compact",
+           "l1_distance_chunked"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +48,8 @@ class IndexConfig:
     hash_impl: str = "gather"    # 'gather' | 'thermo' | 'pallas'
     rerank_chunk: int = 512      # candidates per rerank scan step
     rerank_impl: str = "fused"   # 'fused' (kernel, sort-free dedup) | 'scan'
+    probe_impl: str = "fused"    # 'fused' (lookup+gather kernel, compactable
+                                 # slab) | 'staged' (legacy two-stage pair)
     k: int = 50                  # neighbors returned
     dataset_dtype: str = "int32" # 'int16' halves rerank-gather bytes when
                                  # universe < 32768 (EXPERIMENTS.md §Perf C1)
@@ -66,6 +70,13 @@ class IndexState:
     dataset     : (n, m) int32    the shard's points (rerank source)
     template    : (T+1, 2M) int8  universal probing template (row 0 = epicenter)
     row_offset  : ()  int32       global id of local row 0 (sharding)
+    occ_from    : (L, n) int32    equal-key run length starting at each
+                  position (DESIGN.md §8): a probed bucket's occupancy is
+                  ``occ_from[lo]`` (every searchsorted-left hit lands on a
+                  run start), so the fused probe front-end needs no
+                  ``side='right'`` search.  Optional (None on legacy/
+                  abstract states; the extents then fall back to the
+                  two-sided search).
     """
 
     params: hashes_lib.LshParams
@@ -74,11 +85,12 @@ class IndexState:
     dataset: jax.Array
     template: jax.Array
     row_offset: jax.Array
+    occ_from: Optional[jax.Array] = None
 
     def tree_flatten(self):
         return (
             self.params, self.sorted_keys, self.sorted_ids,
-            self.dataset, self.template, self.row_offset,
+            self.dataset, self.template, self.row_offset, self.occ_from,
         ), None
 
     @classmethod
@@ -143,7 +155,21 @@ def build_index(
         dataset=dataset,
         template=template,
         row_offset=jnp.asarray(row_offset, jnp.int32),
+        occ_from=_run_lengths(sorted_keys),
     )
+
+
+def _run_lengths(sorted_keys: jax.Array) -> jax.Array:
+    """(L, n) equal-key run length starting at each position (§8).
+
+    One n-target search per table at build time buys the query path out of
+    every ``side='right'`` search forever after.
+    """
+    n = sorted_keys.shape[1]
+    run_end = jax.vmap(
+        lambda sk: jnp.searchsorted(sk, sk, side="right"))(sorted_keys)
+    return (run_end - jnp.arange(n, dtype=run_end.dtype)[None, :]
+            ).astype(jnp.int32)
 
 
 # --------------------------------------------------------------------------
@@ -171,3 +197,66 @@ def query_index(cfg: IndexConfig, state: IndexState, queries: jax.Array):
     d, i = pipe.stage_rerank(cfg, state.dataset, queries, ids)
     gid = jnp.where(i >= 0, i + state.row_offset, -1)
     return d, gid
+
+
+# --------------------------------------------------------------------------
+# Compacted two-phase query (DESIGN.md §8)
+# --------------------------------------------------------------------------
+#
+# ``query_index`` is one jit with a static worst-case candidate slab.  The
+# compacted path splits at the only data-dependent decision — how wide a
+# slab this batch actually needs — into two jitted phases with one scalar
+# host read between them: probe (hash + probe keys + candidate counts),
+# then gather+rerank at a pow-2 candidate bucket.  Output is bit-identical
+# to ``query_index`` (the rerank contract depends only on the candidate
+# set); only the padding work shrinks.
+
+@partial(jax.jit, static_argnums=0)
+def probe_index(cfg: IndexConfig, state: IndexState, queries: jax.Array):
+    """Phase A: probe keys + clamped bucket extents + candidate counts.
+
+    Returns (probe_keys (Q, L, P), lo (Q, L*P), cnt (Q, L*P),
+    counts (Q,)).  The extents cross the host-side bucket pick so phase B
+    never re-searches (XLA backends); the probe keys ride along for the
+    Pallas executor, which re-searches in VMEM instead (each backend's
+    unused input is dead-code-eliminated).
+    """
+    bucket, x_neg = pipe.stage_hash(cfg, state.params, queries)
+    probe_keys = pipe.stage_probe_keys(
+        cfg, state.params, state.template, bucket, x_neg)
+    lo, cum, counts = pipe.stage_probe_extents(
+        cfg, state.sorted_keys, probe_keys, state.occ_from)
+    return probe_keys, lo, cum, counts
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def finish_index(cfg: IndexConfig, cbucket: int, state: IndexState,
+                 probe_keys: jax.Array, lo: jax.Array, cum: jax.Array,
+                 queries: jax.Array):
+    """Phase B: compacted gather at the (static) candidate bucket + rerank."""
+    n = state.dataset.shape[0]
+    ids, _ = pipe.stage_fused_probe(
+        cfg, state.sorted_keys, state.sorted_ids, probe_keys, n, cbucket,
+        extents=(lo, cum))
+    if not pipe.rerank_handles_duplicates(cfg):
+        ids = pipe.stage_dedup(ids, n)
+    d, i = pipe.stage_rerank(cfg, state.dataset, queries, ids)
+    gid = jnp.where(i >= 0, i + state.row_offset, -1)
+    return d, gid
+
+
+def query_index_compact(cfg: IndexConfig, state: IndexState,
+                        queries: jax.Array, floor: int = 64,
+                        ctot_cap: Optional[int] = None):
+    """Two-phase compacted query; bit-identical to ``query_index``.
+
+    ``ctot_cap`` bounds the ladder top (pass
+    ``pipe.max_bucket_occupancy``-derived caps when known); defaults to the
+    static worst case L*P*C.
+    """
+    if ctot_cap is None:
+        ctot_cap = (cfg.num_tables * cfg.probes_per_table
+                    * cfg.candidate_cap)
+    probe_keys, lo, cum, counts = probe_index(cfg, state, queries)
+    cb = pipe.candidate_bucket(int(counts.max()), ctot_cap, floor)
+    return finish_index(cfg, cb, state, probe_keys, lo, cum, queries)

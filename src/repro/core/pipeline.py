@@ -17,11 +17,23 @@ Stage contracts (Q queries, L tables, M hashes, P probes/table, C cap):
   stage_probe_keys : bucket, x_neg             -> probe_keys (Q, L, P) uint32
   stage_bucket_lookup : sorted_keys, probe_keys -> lo, hi (Q, L, P)
   stage_candidate_gather : sorted_ids, lo, hi  -> ids (Q, L*P*C), sentinel n
+  stage_probe_counts : sorted_keys, probe_keys -> counts (Q,) valid cands
+  stage_fused_probe : sorted_keys/ids, probe_keys -> ids (Q, Cb), counts (Q,)
   stage_dedup      : ids                       -> ids, duplicates -> sentinel
   stage_tombstone  : ids, gids, tombstones     -> ids, deleted -> sentinel
   stage_rerank     : dataset, queries, ids     -> (dists, ids) (Q, k) asc
   stage_merge_pair : two (Q, k) ascending lists -> one (Q, k) ascending list
   stage_merge_concat : (Q, R*k) stacked lists  -> (Q, k)
+
+Probe dispatch (DESIGN.md §8): ``cfg.probe_impl`` selects between the fused
+lookup+gather kernel (``kernels/fused_probe``, the default) and the legacy
+staged ``stage_bucket_lookup`` + ``stage_candidate_gather`` pair.  The fused
+path packs valid candidates to the front of the slab and can emit a
+**compacted** ``(Q, cbucket)`` slab when the caller passes a static
+``cbucket`` (picked from ``stage_probe_counts`` via ``candidate_bucket`` —
+the same pow-2 shape-bucket discipline the serving engine uses for batch
+sizes).  The rerank contract is order/width-invariant over the candidate
+*set*, so every choice yields bit-identical final (dists, ids).
 
 Rerank dispatch (DESIGN.md §Perf): ``cfg.rerank_impl`` selects between the
 fused gather+L1+running-top-k kernel (``kernels/fused_rerank``, the default)
@@ -53,6 +65,8 @@ __all__ = [
     "stage_probe_keys",
     "stage_bucket_lookup",
     "stage_candidate_gather",
+    "stage_probe_counts",
+    "stage_fused_probe",
     "stage_dedup",
     "stage_tombstone",
     "probe_candidates",
@@ -61,6 +75,10 @@ __all__ = [
     "stage_merge_pair",
     "stage_merge_concat",
     "l1_distance_chunked",
+    "max_bucket_occupancy",
+    "oracle_candidate_cap",
+    "candidate_ladder",
+    "candidate_bucket",
 ]
 
 # Sentinel distance for invalid/padded slots; iinfo//2 so two of them still
@@ -130,6 +148,131 @@ def stage_candidate_gather(
     return jnp.where(valid, ids, n).reshape(q, l * p * c)
 
 
+def stage_probe_extents(cfg, sorted_keys: jax.Array, probe_keys: jax.Array,
+                        occ_from=None):
+    """Clamped bucket extents + per-query candidate counts — the fused
+    front-end's phase A.
+
+    Returns (lo (Q, L*P) int32, csum (Q, L*P) int32 — inclusive prefix sum
+    of the clamped per-bucket counts min(hi-lo, cap) — and counts (Q,)
+    int32).  The two-phase serving path runs this as its own jitted phase,
+    pulls ``counts.max()`` to the host, picks a pow-2 candidate bucket
+    (``candidate_bucket``), and hands (lo, csum) back to
+    ``stage_fused_probe`` so the gather phase neither re-searches nor
+    re-scans.  The counts are exactly what the fused probe kernel reports,
+    so a bucket >= the max count can never truncate.
+
+    ``occ_from`` (``IndexState.occ_from``, the build-time run-length table)
+    replaces the ``side='right'`` search with two gathers — pass it on the
+    serving hot path.
+    """
+    return kops.probe_extents(sorted_keys, probe_keys, cfg.candidate_cap,
+                              occ_from=occ_from)
+
+
+def stage_probe_counts(cfg, sorted_keys: jax.Array, probe_keys: jax.Array,
+                       occ_from=None) -> jax.Array:
+    """Per-query valid-candidate count: ``sum_{l,p} min(hi - lo, cap)``."""
+    return stage_probe_extents(cfg, sorted_keys, probe_keys, occ_from)[2]
+
+
+def stage_fused_probe(
+    cfg, sorted_keys: jax.Array, sorted_ids: jax.Array,
+    probe_keys: jax.Array, n: int, cbucket: Optional[int] = None,
+    extents=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused bucket-lookup + compacted candidate gather (DESIGN.md §8).
+
+    Returns (ids (Q, cbucket) int32 sentinel n — valid candidates packed to
+    the front in (table, probe, offset) order, counts (Q,) int32).
+    ``cbucket`` defaults to the full worst-case ``L*P*C`` width (still
+    fused — the (Q, L, P, C) slab never exists — just not compacted); a
+    caller-picked static ``cbucket`` shrinks the slab the rerank pays for.
+    ``cbucket`` must cover the actual counts or the tail candidates are
+    dropped (callers derive it from ``stage_probe_extents``, whose (lo,
+    cnt) pair can be passed back here as ``extents`` to skip the re-search
+    on XLA backends).
+    """
+    if cbucket is None:
+        cbucket = cfg.num_tables * cfg.probes_per_table * cfg.candidate_cap
+    return kops.fused_probe(
+        sorted_keys, sorted_ids, probe_keys, cfg.candidate_cap, cbucket,
+        extents=extents)
+
+
+# --------------------------------------------------------------------------
+# Candidate-count shape buckets (host-side policy helpers)
+# --------------------------------------------------------------------------
+
+def max_bucket_occupancy(sorted_keys, occ_from=None) -> int:
+    """Largest run of equal bucket keys over all tables (host-side).
+
+    The one shared derivation of "how many candidates can a single probed
+    bucket hold": the quality oracle's union-exactness cap
+    (``oracle_candidate_cap``) and the candidate-compaction ladder
+    (``candidate_ladder`` via segments' per-segment ctot cap) both build on
+    it, so the two cannot drift.  When the build-time run-length table
+    (``IndexState.occ_from``) is at hand its max IS this quantity — one
+    device reduce instead of a host run-length sweep.
+    """
+    if occ_from is not None and occ_from.size:
+        # device reduce + scalar transfer — never np.asarray the (L, n)
+        # table to host (this runs at every segment seal/compaction)
+        return max(1, int(occ_from.max()))
+    keys = np.asarray(sorted_keys)
+    if keys.size == 0:
+        return 1
+    runs = keys[..., 1:] == keys[..., :-1]
+    if not runs.any():
+        return 1
+    best = 1
+    for t in range(keys.shape[0]):
+        r = runs[t]
+        # lengths of True-runs, vectorized: positions where runs flip
+        idx = np.flatnonzero(np.diff(np.concatenate(([False], r, [False]))))
+        if idx.size:
+            best = max(best, int((idx[1::2] - idx[::2]).max()) + 1)
+    return best
+
+
+def oracle_candidate_cap(cfg, sorted_keys, occ_from=None) -> int:
+    """Candidate cap that makes any gather over ``sorted_keys`` exhaustive.
+
+    At this cap no probed bucket is ever truncated, so per-shard/per-segment
+    candidate sets union to exactly the flat index's set — the precondition
+    for the cross-layer bit-identity oracles (eval/quality.py).
+    """
+    return max(cfg.candidate_cap, max_bucket_occupancy(sorted_keys, occ_from))
+
+
+def candidate_ladder(ctot_cap: int, floor: int = 64) -> Tuple[int, ...]:
+    """Pow-2 candidate-count buckets [floor, 2*floor, ...] topped by
+    ``ctot_cap`` (the shard's real worst case, which may not be pow-2).
+
+    The serving engine pre-compiles the gather+rerank phase at every rung
+    (warmup's (batch-bucket x candidate-bucket) grid) and
+    ``candidate_bucket`` only ever picks rungs, so live traffic cannot hit
+    an uncompiled candidate shape.
+    """
+    ctot_cap = max(1, int(ctot_cap))
+    floor = max(1, int(floor))
+    out = []
+    b = 1 << (floor - 1).bit_length()
+    while b < ctot_cap:
+        out.append(b)
+        b *= 2
+    out.append(ctot_cap)
+    return tuple(out)
+
+
+def candidate_bucket(count: int, ctot_cap: int, floor: int = 64) -> int:
+    """Smallest ladder rung covering ``count`` valid candidates."""
+    for b in candidate_ladder(ctot_cap, floor):
+        if count <= b:
+            return b
+    return max(1, int(ctot_cap))
+
+
 def rerank_handles_duplicates(cfg) -> bool:
     """True when ``stage_rerank``'s implementation suppresses duplicates.
 
@@ -179,18 +322,32 @@ def probe_candidates(
     cfg, params: hashes_lib.LshParams, template: jax.Array,
     sorted_keys: jax.Array, sorted_ids: jax.Array, n: int,
     queries: jax.Array, dedup: Optional[bool] = None,
+    cbucket: Optional[int] = None,
 ) -> jax.Array:
-    """hash -> probe-gen -> bucket-lookup -> gather [-> dedup], composed.
+    """hash -> probe-gen -> lookup+gather [-> dedup], composed.
 
-    Returns candidate local ids (Q, L*P*C), sentinel n.  ``dedup`` defaults
-    to cfg-driven: the sorting dedup only runs when the configured rerank
-    impl does not dedup internally (``rerank_handles_duplicates``); the
-    fused path consumes the raw gather and masks duplicates in-kernel.
+    Returns candidate local ids, sentinel n.  The lookup+gather runs per
+    ``cfg.probe_impl``: 'fused' (default) uses the fused front-end kernel
+    (valid candidates packed first; slab width ``cbucket`` when given, else
+    the worst-case L*P*C), 'staged' the legacy two-stage pair at fixed
+    L*P*C width (``cbucket`` unsupported there).  ``dedup`` defaults to
+    cfg-driven: the sorting dedup only runs when the configured rerank impl
+    does not dedup internally (``rerank_handles_duplicates``); the fused
+    rerank consumes the raw gather and masks duplicates in-kernel.
     """
     bucket, x_neg = stage_hash(cfg, params, queries)
     probe_keys = stage_probe_keys(cfg, params, template, bucket, x_neg)
-    lo, hi = stage_bucket_lookup(sorted_keys, probe_keys)
-    ids = stage_candidate_gather(cfg, sorted_ids, lo, hi, n)
+    impl = getattr(cfg, "probe_impl", "fused")
+    if impl == "fused":
+        ids, _ = stage_fused_probe(
+            cfg, sorted_keys, sorted_ids, probe_keys, n, cbucket)
+    elif impl == "staged":
+        if cbucket is not None:
+            raise ValueError("cbucket compaction requires probe_impl='fused'")
+        lo, hi = stage_bucket_lookup(sorted_keys, probe_keys)
+        ids = stage_candidate_gather(cfg, sorted_ids, lo, hi, n)
+    else:
+        raise ValueError(f"unknown probe_impl: {impl!r}")
     if dedup is None:
         dedup = not rerank_handles_duplicates(cfg)
     return stage_dedup(ids, n) if dedup else ids

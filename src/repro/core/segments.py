@@ -40,7 +40,8 @@ import numpy as np
 
 from . import hashes as hashes_lib
 from . import pipeline as pipe
-from .index import IndexConfig, IndexState, build_index, make_params, make_template
+from .index import (IndexConfig, IndexState, build_index, make_params,
+                    make_template, probe_index)
 
 __all__ = ["Segment", "SegmentedIndex"]
 
@@ -54,10 +55,26 @@ class Segment:
     state: IndexState                 # built with row_offset = 0
     gids: jax.Array                   # (n,) int32 global row ids
     fingerprint: int                  # hashes.params_fingerprint(state.params)
+    ctot_cap: int = 0                 # worst-case valid candidates per query:
+                                      # L*P*min(cap, max bucket occupancy);
+                                      # 0 = not yet derived (see _seg_ctot_cap)
 
     @property
     def size(self) -> int:
         return int(self.gids.shape[0])
+
+
+def _seg_ctot_cap(cfg: IndexConfig, state: IndexState) -> int:
+    """Ladder top for candidate compaction over this segment (DESIGN.md §8).
+
+    Uses the same occupancy derivation as the quality oracle's
+    union-exactness cap (``pipe.max_bucket_occupancy``), so the compaction
+    bound and the oracle cap cannot drift.  One host read of the sorted
+    keys per segment seal — amortized over every query the segment serves.
+    """
+    occ = pipe.max_bucket_occupancy(state.sorted_keys, state.occ_from)
+    return (cfg.num_tables * cfg.probes_per_table
+            * min(cfg.candidate_cap, occ))
 
 
 @partial(jax.jit, static_argnums=0)
@@ -79,6 +96,36 @@ def _query_segment(cfg: IndexConfig, state: IndexState, gids: jax.Array,
     ids = pipe.stage_tombstone(ids, gids, tombstones, n)
     d, i = pipe.stage_rerank(cfg, state.dataset, queries, ids)
     if n == 0:  # zero-point segment: rerank is all-invalid, gids is empty
+        return d, i
+    gid = jnp.where(i >= 0, gids[jnp.clip(i, 0, n - 1)], -1)
+    return d, gid
+
+
+# Compaction phase A over one segment == the flat index's phase A (a
+# segment IS an IndexState); one composition, so the flat and segmented
+# compact paths cannot drift.
+_probe_segment = probe_index
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def _finish_segment(cfg: IndexConfig, cbucket: int, state: IndexState,
+                    gids: jax.Array, tombstones: jax.Array,
+                    probe_keys: jax.Array, lo: jax.Array, cum: jax.Array,
+                    queries: jax.Array):
+    """Compaction phase B: compacted gather at the (static) candidate bucket
+    -> [dedup ->] tombstone -> rerank -> gid map.  Same stage order as
+    ``_query_segment``, so results are bit-identical at any non-truncating
+    ``cbucket`` — only the padding lanes the rerank pays for shrink.
+    """
+    n = state.dataset.shape[0]
+    ids, _ = pipe.stage_fused_probe(
+        cfg, state.sorted_keys, state.sorted_ids, probe_keys, n, cbucket,
+        extents=(lo, cum))
+    if not pipe.rerank_handles_duplicates(cfg):
+        ids = pipe.stage_dedup(ids, n)
+    ids = pipe.stage_tombstone(ids, gids, tombstones, n)
+    d, i = pipe.stage_rerank(cfg, state.dataset, queries, ids)
+    if n == 0:
         return d, i
     gid = jnp.where(i >= 0, gids[jnp.clip(i, 0, n - 1)], -1)
     return d, gid
@@ -147,7 +194,8 @@ class SegmentedIndex:
                             template=idx._template)
         idx.segments = [Segment(state=state,
                                 gids=jnp.arange(n, dtype=jnp.int32),
-                                fingerprint=idx.fingerprint)]
+                                fingerprint=idx.fingerprint,
+                                ctot_cap=_seg_ctot_cap(cfg, state))]
         idx._next_gid = int(n)
         return idx
 
@@ -166,7 +214,8 @@ class SegmentedIndex:
         idx = cls(cfg, jax.random.PRNGKey(0), int(state.dataset.shape[1]),
                   delta_cap, params=state.params)
         idx.segments = [Segment(state=state, gids=gids,
-                                fingerprint=idx.fingerprint)]
+                                fingerprint=idx.fingerprint,
+                                ctot_cap=_seg_ctot_cap(cfg, state))]
         idx._next_gid = int(next_gid)
         return idx
 
@@ -267,7 +316,8 @@ class SegmentedIndex:
             template=self._template)
         self.segments.append(Segment(
             state=state, gids=jnp.asarray(self._delta_gids[:n].copy()),
-            fingerprint=self.fingerprint))
+            fingerprint=self.fingerprint,
+            ctot_cap=_seg_ctot_cap(self.cfg, state)))
         self._delta_count = 0
         self._delta_gids[:] = -1
         self._delta_cache = None
@@ -312,7 +362,8 @@ class SegmentedIndex:
                             jnp.asarray(data), params=self.params,
                             template=self._template)
         self.segments = [Segment(state=state, gids=jnp.asarray(gids),
-                                 fingerprint=self.fingerprint)]
+                                 fingerprint=self.fingerprint,
+                                 ctot_cap=_seg_ctot_cap(self.cfg, state))]
 
     # -- query ------------------------------------------------------------
 
@@ -381,3 +432,87 @@ class SegmentedIndex:
             d, i = pipe.stage_merge_pair(d, i, dn, in_,
                                          use_kernel=use_merge_kernel)
         return d, i
+
+    # -- compacted query (DESIGN.md §8) ------------------------------------
+
+    def candidate_ladders(self, floor: int = 64):
+        """Per-segment candidate-bucket ladders, aligned with ``segments``.
+
+        Zero-point segments have no probe front-end and get an empty
+        ladder.  The engine pre-compiles the gather phase at every rung
+        (warmup's (batch-bucket x candidate-bucket) grid).
+        """
+        return tuple(
+            pipe.candidate_ladder(seg.ctot_cap or _seg_ctot_cap(
+                self.cfg, seg.state), floor) if seg.size else ()
+            for seg in self.segments)
+
+    def query_compact(self, queries: jax.Array, floor: int = 64,
+                      use_merge_kernel: bool = True):
+        """``query`` with the fused+compacted probe front-end.
+
+        Per segment: one jitted probe phase (probe keys + counts), one
+        scalar host read to pick the pow-2 candidate bucket, then the
+        jitted gather+rerank phase at that (static) width — small/sparse
+        segments stop paying the worst-case ``L*P*C`` slab.  Bit-identical
+        to ``query`` (the oracle pins it).  Returns (dists, gids,
+        used) where ``used`` is a tuple of (segment_size, cbucket) pairs —
+        the shapes this call specialized on, for the engine's honest
+        cold-hit tracking.
+        """
+        queries = jnp.asarray(queries)
+        tomb = self._tombstone_array()
+        results, used = [], []
+        for seg in self.segments:
+            if seg.size == 0:
+                # no probe front-end to compact; the stock path already
+                # short-circuits to the all-invalid result
+                results.append(_query_segment(
+                    self.cfg, seg.state, seg.gids, tomb, queries))
+                continue
+            probe_keys, lo, cum, counts = _probe_segment(
+                self.cfg, seg.state, queries)
+            cb = pipe.candidate_bucket(
+                int(counts.max()), seg.ctot_cap, floor)
+            results.append(_finish_segment(
+                self.cfg, cb, seg.state, seg.gids, tomb, probe_keys,
+                lo, cum, queries))
+            used.append((seg.size, cb))
+        if self._delta_count or not results:
+            delta_pts, delta_gids = self._delta_arrays()
+            results.append(_query_delta(
+                self.cfg, delta_pts, delta_gids,
+                jnp.int32(self._delta_count), tomb, queries))
+        d, i = results[0]
+        for dn, in_ in results[1:]:
+            d, i = pipe.stage_merge_pair(d, i, dn, in_,
+                                         use_kernel=use_merge_kernel)
+        return d, i, tuple(used)
+
+    def warm_compact(self, queries: jax.Array, floor: int = 64):
+        """Compile the compacted query path for this batch shape.
+
+        Runs the probe phase once per segment and the gather phase at
+        EVERY ladder rung (not just the rung this batch would pick), plus
+        one full ``query_compact`` for the delta/merge executables —
+        live traffic on any candidate bucket then hits compiled code.
+        Returns every (segment_size, cbucket) pair compiled.
+        """
+        queries = jnp.asarray(queries)
+        tomb = self._tombstone_array()
+        warmed = []
+        for seg, ladder in zip(self.segments, self.candidate_ladders(floor)):
+            if not ladder:
+                continue
+            probe_keys, lo, cum, counts = _probe_segment(
+                self.cfg, seg.state, queries)
+            counts.block_until_ready()
+            for cb in ladder:
+                d, _ = _finish_segment(
+                    self.cfg, cb, seg.state, seg.gids, tomb, probe_keys,
+                    lo, cum, queries)
+                d.block_until_ready()
+                warmed.append((seg.size, cb))
+        d, _, used = self.query_compact(queries, floor)
+        d.block_until_ready()
+        return tuple(warmed) + used

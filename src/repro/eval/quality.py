@@ -34,7 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines as bl
-from repro.core.index import IndexConfig, build_index, make_params, query_index
+from repro.core import pipeline as pipe
+from repro.core.index import (IndexConfig, build_index, make_params,
+                              query_index, query_index_compact)
 from repro.core.segments import SegmentedIndex
 
 __all__ = ["SCHEMES", "QualitySpec", "QualityRun", "tables_needed"]
@@ -308,14 +310,14 @@ class QualityRun:
         from repro.serve.engine import ServeConfig
 
         state = build_index(cfg, self.key, self.data)
-        # max run of equal bucket keys over all tables == the occupancy a
-        # non-truncating gather must cover (cap is not a build parameter,
-        # so the state is reusable under the raised-cap config)
-        keys = np.asarray(state.sorted_keys)
-        max_bucket = max(int(np.unique(t, return_counts=True)[1].max())
-                         for t in keys) if keys.size else 1
+        # the occupancy a non-truncating gather must cover — the SAME
+        # derivation the candidate-compaction ladder builds on
+        # (pipeline.max_bucket_occupancy via segments._seg_ctot_cap), so
+        # oracle exactness and compaction bounds cannot drift (cap is not a
+        # build parameter, so the state is reusable under the raised cap)
         cfg = dataclasses.replace(
-            cfg, candidate_cap=max(cfg.candidate_cap, max_bucket))
+            cfg, candidate_cap=pipe.oracle_candidate_cap(
+                cfg, state.sorted_keys, state.occ_from))
         fd, fi = map(np.asarray, query_index(cfg, state, self.queries))
         with tempfile.TemporaryDirectory(dir=root_dir) as root:
             router = ClusterRouter(
@@ -351,6 +353,31 @@ class QualityRun:
             "cluster_oracle_cap": cfg.candidate_cap,
         }
 
+    def check_compact(self, cfg: IndexConfig, flat=None) -> dict:
+        """Compacted-front-end oracle (DESIGN.md §8): the fused probe with
+        pow-2 candidate-count buckets — both the flat two-phase
+        ``query_index_compact`` and the segmented ``query_compact`` —
+        must reproduce the flat worst-case-slab result bit-for-bit, while
+        actually shrinking the slab (the reported buckets show by how
+        much)."""
+        fd, fi = self.query_flat(cfg) if flat is None else flat
+        fd, fi = np.asarray(fd), np.asarray(fi)
+        state = build_index(cfg, self.key, self.data)
+        cd, ci = query_index_compact(cfg, state, self.queries)
+        idx = SegmentedIndex.from_dataset(cfg, self.key, self.data)
+        sd, si, used = idx.query_compact(self.queries)
+        return {
+            "compact_flat_matches_flat": bool(
+                np.array_equal(np.asarray(cd), fd)
+                and np.array_equal(np.asarray(ci), fi)),
+            "compact_segmented_matches_flat": bool(
+                np.array_equal(np.asarray(sd), fd)
+                and np.array_equal(np.asarray(si), fi)),
+            "compact_cand_buckets": [cb for _, cb in used],
+            "compact_full_slab": (cfg.num_tables * cfg.probes_per_table
+                                  * cfg.candidate_cap),
+        }
+
     def check_distributed(self, cfg: IndexConfig, flat=None) -> dict:
         """Distributed-path oracle: all-gather shard_map == flat, bit-for-bit
         (single row shard; queries sharded over 'model').  ``flat`` may pass
@@ -369,6 +396,7 @@ class QualityRun:
         """All oracle layers for one config; every flag must be True/hold."""
         flat = self.query_flat(cfg)  # shared by all checks (one build)
         out = self.check_segmented(cfg, flat=flat)
+        out.update(self.check_compact(cfg, flat=flat))
         out.update(self.check_distributed(cfg, flat=flat))
         if cluster:
             out.update(self.check_cluster(cfg))

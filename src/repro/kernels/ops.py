@@ -11,13 +11,15 @@ import os
 
 import jax
 
+from .fused_probe import (compact_gather_xla, fused_probe_pallas,
+                          fused_probe_xla, probe_extents_xla)
 from .fused_rerank import fused_rerank_pallas, fused_rerank_xla
 from .l1_distance import l1_distance_pallas, l1_distance_rows_pallas
 from .rw_hash import rw_hash_pallas
 from .topk_merge import topk_merge_pallas
 
 __all__ = ["l1_distance", "l1_distance_rows", "rw_hash", "topk_merge",
-           "fused_rerank", "use_interpret"]
+           "fused_rerank", "fused_probe", "probe_extents", "use_interpret"]
 
 
 def use_interpret() -> bool:
@@ -60,3 +62,44 @@ def fused_rerank(dataset, queries, ids, k, chunk=512, **kw):
         return fused_rerank_pallas(dataset, queries, ids, k,
                                    interpret=use_interpret(), **kw)
     return fused_rerank_xla(dataset, queries, ids, k, chunk=chunk)
+
+
+def probe_extents(sorted_keys, probe_keys, cap, occ_from=None):
+    """Clamped (lo, csum, counts) bucket extents — fused-probe phase A.
+
+    Plain XLA on every backend (a searchsorted sweep + gathers + a scan;
+    there is no big gather to fuse).  The (lo, csum) pair is what the
+    two-phase serving path hands back to ``fused_probe(extents=...)`` so
+    the gather phase does not repeat the search on XLA backends.
+    ``occ_from`` (the build-time run-length table) drops the right-side
+    search — pass it whenever the index carries one.
+    """
+    return probe_extents_xla(sorted_keys, probe_keys, cap, occ_from=occ_from)
+
+
+def fused_probe(sorted_keys, sorted_ids, probe_keys, cap, cbucket,
+                extents=None, **kw):
+    """Fused bucket-lookup + compacted candidate gather (DESIGN.md §8).
+
+    Executor choice mirrors ``fused_rerank``: the Mosaic kernel's in-kernel
+    bisections are too deep to run interpreted in the hot path, so non-TPU
+    backends get the bit-identical XLA executor.  Force one with
+    ``REPRO_PROBE_EXECUTOR=pallas|xla`` (parity tests pin pallas-interpret
+    against the XLA executor and the ref oracle).
+
+    ``extents`` — a precomputed ``probe_extents`` (lo, csum) pair — lets the
+    XLA executor skip the search (the two-phase serving path computes it in
+    phase A anyway); the Pallas kernel ignores it and re-searches in VMEM,
+    which is cheaper than carrying extents through HBM on TPU.
+    """
+    executor = os.environ.get("REPRO_PROBE_EXECUTOR")
+    if executor is None:
+        executor = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if executor == "pallas":
+        return fused_probe_pallas(sorted_keys, sorted_ids, probe_keys,
+                                  cap, cbucket, interpret=use_interpret(),
+                                  **kw)
+    if extents is not None:
+        return compact_gather_xla(sorted_ids, extents[0], extents[1],
+                                  probe_keys.shape[2], cbucket)
+    return fused_probe_xla(sorted_keys, sorted_ids, probe_keys, cap, cbucket)

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["l1_distance", "l1_distance_rows", "rw_hash", "topk_merge",
-           "fused_rerank"]
+           "fused_rerank", "fused_probe"]
 
 _BIG = (2 ** 31 - 1) // 2  # == iinfo(int32).max // 2, pipeline.BIG_DIST
 
@@ -82,6 +82,46 @@ def fused_rerank(dataset: jax.Array, queries: jax.Array, ids: jax.Array,
         si = jnp.pad(si, ((0, 0), (0, pad)), constant_values=-1)
     sd, si = sd[:, :k], si[:, :k]
     return sd, jnp.where(sd >= big, -1, si)
+
+
+def fused_probe(sorted_keys: jax.Array, sorted_ids: jax.Array,
+                probe_keys: jax.Array, cap: int, cbucket: int):
+    """Semantic ground truth for the fused probe front-end (§8).
+
+    Materializes the full staged ``(Q, L*P*C)`` slab exactly like
+    ``pipeline.stage_candidate_gather`` (the thing the fused kernel avoids),
+    then compacts it with a stable sort on the invalid flag — valid
+    candidates packed to the front in their original (table, probe, offset)
+    order, sentinel ``n`` tail, truncated at ``cbucket``.  Returns
+    (ids (Q, cbucket) int32, counts (Q,) int32 — pre-truncation totals).
+    """
+    l, n = sorted_keys.shape
+    q, _, p = probe_keys.shape
+    if n == 0 or cbucket == 0 or q == 0:
+        return (jnp.zeros((q, cbucket), jnp.int32),
+                jnp.zeros((q,), jnp.int32))
+
+    def per_table(sk, pk):
+        return (jnp.searchsorted(sk, pk, side="left"),
+                jnp.searchsorted(sk, pk, side="right"))
+
+    lo, hi = jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
+        sorted_keys, probe_keys)                        # (Q, L, P)
+    slots = lo[..., None] + jnp.arange(cap, dtype=lo.dtype)
+    valid = slots < jnp.minimum(hi, lo + cap)[..., None]
+    slots = jnp.clip(slots, 0, n - 1)
+    ids = jax.vmap(lambda sid, sl: sid[sl], in_axes=(0, 1), out_axes=1)(
+        sorted_ids, slots)                              # (Q, L, P, C)
+    full = jnp.where(valid, ids, n).reshape(q, l * p * cap)
+    order = jnp.argsort(full == n, axis=-1, stable=True)
+    packed = jnp.take_along_axis(full, order, axis=-1)
+    counts = (full != n).sum(axis=-1).astype(jnp.int32)
+    if cbucket <= packed.shape[1]:
+        packed = packed[:, :cbucket]
+    else:
+        packed = jnp.pad(packed, ((0, 0), (0, cbucket - packed.shape[1])),
+                         constant_values=n)
+    return packed.astype(jnp.int32), counts
 
 
 def topk_merge(da: jax.Array, ia: jax.Array, db: jax.Array, ib: jax.Array):

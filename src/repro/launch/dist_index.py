@@ -53,6 +53,7 @@ def state_specs(mesh: Mesh, cfg: IndexConfig) -> IndexState:
         dataset=P(rows, None),
         template=P(),
         row_offset=P(rows),
+        occ_from=P(None, rows),
     )
 
 
@@ -73,29 +74,38 @@ def dist_build_fn(cfg: IndexConfig, mesh: Mesh):
                             row_offset=idx * n_local, params=params)
         # row_offset out as (1,) so it shards over `rows`
         return (state.sorted_keys, state.sorted_ids,
-                state.row_offset[None])
+                state.row_offset[None], state.occ_from)
 
     fn = shard_map(
         local_build, mesh=mesh,
         in_specs=(P(rows, None), P()),
-        out_specs=(P(None, rows), P(None, rows), P(rows)),
+        out_specs=(P(None, rows), P(None, rows), P(rows), P(None, rows)),
         check_rep=False,
     )
 
     def build(dataset, params):
-        sorted_keys, sorted_ids, row_offset = fn(dataset, params)
+        sorted_keys, sorted_ids, row_offset, occ_from = fn(dataset, params)
         template = jnp.asarray(make_template(cfg))
         return IndexState(params=params, sorted_keys=sorted_keys,
                           sorted_ids=sorted_ids, dataset=dataset,
-                          template=template, row_offset=row_offset)
+                          template=template, row_offset=row_offset,
+                          occ_from=occ_from)
 
     return build
 
 
-def dist_query_fn(cfg: IndexConfig, mesh: Mesh, merge: str = "allgather"):
+def dist_query_fn(cfg: IndexConfig, mesh: Mesh, merge: str = "allgather",
+                  cand_bucket: int | None = None):
     """Returns query(state, queries) -> (dists (Q, k), ids (Q, k)).
 
     queries: (Q_global, m) sharded over 'model'.  merge: 'allgather' | 'ring'.
+    ``cand_bucket`` statically compacts each shard's candidate slab to that
+    width via the fused probe front-end (DESIGN.md §8) — shard_map bodies
+    cannot take the two-phase host round-trip, but a caller that knows its
+    shard occupancy (e.g. ``pipe.oracle_candidate_cap``-derived) passes the
+    bound here and every shard gathers/reranks at it instead of the
+    worst-case ``L*P*C``.  Results are bit-identical as long as the bucket
+    covers the per-shard candidate counts.
     """
     rows = _row_axes(mesh)
     nshards = int(np.prod([mesh.shape[a] for a in rows]))
@@ -111,7 +121,8 @@ def dist_query_fn(cfg: IndexConfig, mesh: Mesh, merge: str = "allgather"):
         # lex-(dist, id) ascending order the ring/tree merges require.
         n = dataset.shape[0]
         ids = pipe.probe_candidates(
-            cfg, params, template, sorted_keys, sorted_ids, n, queries)
+            cfg, params, template, sorted_keys, sorted_ids, n, queries,
+            cbucket=cand_bucket)
         d, i = pipe.stage_rerank(cfg, dataset, queries, ids)   # local top-k
         i = jnp.where(i >= 0, i + row_offset[0], -1)           # global ids
         d = jnp.where(i < 0, big, d)

@@ -206,7 +206,8 @@ def lower_ann_cell(multi_pod: bool = False, n_global: int = 1 << 27,
         dataset=jax.ShapeDtypeStruct((n_global, dim), jnp.dtype(dataset_dtype)),
         template=jax.ShapeDtypeStruct(
             (cfg.probes_per_table, 2 * cfg.num_hashes), jnp.int8),
-        row_offset=jax.ShapeDtypeStruct((nshards,), jnp.int32))
+        row_offset=jax.ShapeDtypeStruct((nshards,), jnp.int32),
+        occ_from=jax.ShapeDtypeStruct((cfg.num_tables, n_global), jnp.int32))
     queries = jax.ShapeDtypeStruct((q_global, dim), jnp.int32)
 
     sspec = di.state_specs(mesh, cfg)

@@ -1,0 +1,304 @@
+"""Fused probe front-end: executor parity + compaction properties (§8).
+
+Three layers of pinning:
+  1. kernel parity — ``fused_probe_xla`` == ``fused_probe_pallas``
+     (interpret) == ``ref.fused_probe`` == a plain-python oracle, across
+     hypothesis-driven (Q, L, P, C, n) shapes and the named edge cases
+     (empty buckets, all-sentinel queries, single-point segments,
+     duplicate candidates across tables, truncating buckets);
+  2. pipeline parity — ``probe_candidates`` fused vs staged feed the rerank
+     identical candidate *sets*, so ``query_index`` is bit-identical under
+     either ``probe_impl`` and under the two-phase compacted path;
+  3. serving parity — the engine's compacted path returns the same bits as
+     the worst-case-slab path, with zero unplanned recompiles after the
+     (batch-bucket x candidate-bucket) warmup grid.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pipeline as pipe
+from repro.core.index import (IndexConfig, build_index, query_index,
+                              query_index_compact)
+from repro.core.segments import SegmentedIndex
+from repro.data import ann_synthetic as ds
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.fused_probe import fused_probe_pallas, fused_probe_xla
+
+KEY = jax.random.PRNGKey(0)
+
+
+def np_fused_probe(keys, ids, pk, cap, cbucket):
+    """Plain-python oracle: per-(table, probe) bisect + clamped append."""
+    l, n = keys.shape
+    q, _, p = pk.shape
+    out = np.full((q, cbucket), n, np.int32)
+    counts = np.zeros((q,), np.int32)
+    for qq in range(q):
+        buf = []
+        for t in range(l):
+            for j in range(p):
+                lo = int(np.searchsorted(keys[t], pk[qq, t, j], "left"))
+                hi = int(np.searchsorted(keys[t], pk[qq, t, j], "right"))
+                buf.extend(ids[t, lo:lo + min(hi - lo, cap)].tolist())
+        counts[qq] = len(buf)
+        out[qq, :min(len(buf), cbucket)] = buf[:cbucket]
+    return out, counts
+
+
+def _assert_all_equal(keys, ids, pk, cap, cbucket):
+    keys_j, ids_j, pk_j = map(jnp.asarray, (keys, ids, pk))
+    want_ids, want_cnt = np_fused_probe(keys, ids, pk, cap, cbucket)
+    for name, got in {
+        "xla": fused_probe_xla(keys_j, ids_j, pk_j, cap, cbucket),
+        "pallas": fused_probe_pallas(keys_j, ids_j, pk_j, cap, cbucket,
+                                     interpret=True),
+        "ref": ref.fused_probe(keys_j, ids_j, pk_j, cap, cbucket),
+        "ops": kops.fused_probe(keys_j, ids_j, pk_j, cap, cbucket),
+    }.items():
+        np.testing.assert_array_equal(np.asarray(got[0]), want_ids,
+                                      err_msg=f"{name} ids")
+        np.testing.assert_array_equal(np.asarray(got[1]), want_cnt,
+                                      err_msg=f"{name} counts")
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel parity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_fused_probe_property_parity(data):
+    """All executors agree with the python oracle on random shapes/keys."""
+    l = data.draw(st.integers(1, 5), label="L")
+    n = data.draw(st.integers(0, 200), label="n")
+    p = data.draw(st.integers(1, 12), label="P")
+    cap = data.draw(st.integers(1, 16), label="cap")
+    q = data.draw(st.integers(1, 9), label="Q")
+    cbucket = data.draw(st.sampled_from([1, 8, 64, 300]), label="cbucket")
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    rng = np.random.default_rng(seed)
+    # small key universe -> many duplicate keys (occupied buckets); probe
+    # keys drawn wider -> plenty of misses (empty buckets) too
+    universe = max(1, n // 2)
+    keys = np.sort(rng.integers(0, universe + 1, (l, n)).astype(np.uint32),
+                   axis=-1)
+    ids = (np.stack([rng.permutation(n) for _ in range(l)]).astype(np.int32)
+           if n else np.zeros((l, 0), np.int32))
+    pk = rng.integers(0, universe + 3, (q, l, p)).astype(np.uint32)
+    _assert_all_equal(keys, ids, pk, cap, cbucket)
+
+
+@pytest.mark.parametrize("n", [0, 1])
+def test_tiny_segments(n):
+    """Zero- and single-point segments (the compaction's best case)."""
+    l, p, q = 3, 4, 5
+    keys = np.zeros((l, n), np.uint32)
+    ids = np.zeros((l, n), np.int32)
+    rng = np.random.default_rng(0)
+    pk = rng.integers(0, 3, (q, l, p)).astype(np.uint32)
+    pk[0] = 0   # probe key that hits the single bucket in every table
+    _assert_all_equal(keys, ids, pk, cap=4, cbucket=32)
+
+
+def test_all_sentinel_query_and_uint32_extremes():
+    """Probe keys that match nothing -> all-sentinel row, count 0; the
+    UINT32_MAX probe key must not count the Pallas executor's pad tail."""
+    rng = np.random.default_rng(1)
+    l, n, p = 2, 150, 6
+    keys = np.sort(rng.integers(10, 50, (l, n)).astype(np.uint32), axis=-1)
+    ids = np.stack([rng.permutation(n) for _ in range(l)]).astype(np.int32)
+    pk = np.full((3, l, p), 5, np.uint32)        # all below every key
+    pk[1] = 0xFFFFFFFF                           # above every key
+    pk[2, 0, 0] = keys[0, 0]                     # one hit
+    _assert_all_equal(keys, ids, pk, cap=8, cbucket=64)
+    out, cnt = np_fused_probe(keys, ids, pk, 8, 64)
+    assert cnt[0] == 0 and cnt[1] == 0 and (out[0] == n).all()
+
+
+def test_duplicate_candidates_across_tables_survive():
+    """A point present in every table's probed bucket appears once per
+    (table, probe) hit — compaction must NOT dedup (the rerank owns that),
+    or the fused path would diverge from the staged slab's candidate set."""
+    l, n, p = 4, 8, 1
+    keys = np.zeros((l, n), np.uint32)           # one bucket per table
+    ids = np.tile(np.arange(n, dtype=np.int32), (l, 1))
+    pk = np.zeros((1, l, p), np.uint32)
+    out, cnt = np_fused_probe(keys, ids, pk, cap=n, cbucket=64)
+    assert cnt[0] == l * n                        # every table contributes
+    _assert_all_equal(keys, ids, pk, cap=n, cbucket=64)
+
+
+def test_truncating_bucket_is_prefix():
+    """A binding cbucket keeps exactly the first cbucket candidates in
+    (table, probe, offset) order and still reports the full count."""
+    rng = np.random.default_rng(2)
+    l, n, p, cap = 3, 100, 5, 8
+    keys = np.sort(rng.integers(0, 20, (l, n)).astype(np.uint32), axis=-1)
+    ids = np.stack([rng.permutation(n) for _ in range(l)]).astype(np.int32)
+    pk = rng.integers(0, 22, (4, l, p)).astype(np.uint32)
+    wide, cnt_w = np_fused_probe(keys, ids, pk, cap, 512)
+    for cb in (1, 5, 17):
+        narrow, cnt_n = np_fused_probe(keys, ids, pk, cap, cb)
+        np.testing.assert_array_equal(cnt_n, cnt_w)
+        np.testing.assert_array_equal(narrow, wide[:, :cb])
+        _assert_all_equal(keys, ids, pk, cap, cb)
+
+
+def test_extents_occ_from_parity(cfg, small):
+    """The build-time run-length shortcut (IndexState.occ_from) must
+    produce bit-identical extents to the two-sided-search fallback —
+    including misses, run starts, and the clamp."""
+    data, queries = small
+    state = build_index(cfg, KEY, data)
+    bucket, x_neg = pipe.stage_hash(cfg, state.params, queries)
+    pk = pipe.stage_probe_keys(
+        cfg, state.params, state.template, bucket, x_neg)
+    plain = pipe.stage_probe_extents(cfg, state.sorted_keys, pk)
+    fast = pipe.stage_probe_extents(cfg, state.sorted_keys, pk,
+                                    state.occ_from)
+    for a, b in zip(plain, fast):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # occ_from's max IS the occupancy the oracle derives from raw keys
+    assert (pipe.max_bucket_occupancy(state.sorted_keys)
+            == pipe.max_bucket_occupancy(state.sorted_keys, state.occ_from))
+
+
+def test_counts_match_stage_probe_counts():
+    """``stage_probe_counts`` (the cheap phase-A counts) must equal the
+    counts the fused gather reports — or a picked bucket could truncate."""
+    rng = np.random.default_rng(3)
+    l, n, p, cap = 4, 120, 7, 6
+    keys = np.sort(rng.integers(0, 30, (l, n)).astype(np.uint32), axis=-1)
+    ids = np.stack([rng.permutation(n) for _ in range(l)]).astype(np.int32)
+    pk = rng.integers(0, 33, (6, l, p)).astype(np.uint32)
+    cfg = IndexConfig(num_tables=l, num_probes=p - 1, candidate_cap=cap)
+    counts = pipe.stage_probe_counts(
+        cfg, jnp.asarray(keys), jnp.asarray(pk))
+    _, kernel_counts = fused_probe_xla(
+        jnp.asarray(keys), jnp.asarray(ids), jnp.asarray(pk), cap, 64)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(kernel_counts))
+
+
+# ---------------------------------------------------------------------------
+# 2. pipeline parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small():
+    spec = ds.DatasetSpec("probe", n=2500, dim=16, universe=64,
+                          num_clusters=8)
+    data = ds.make_dataset(spec)
+    queries = ds.make_queries(spec, data, 12)
+    return jnp.asarray(data), jnp.asarray(queries)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return IndexConfig(num_tables=4, num_hashes=8, width=24, num_probes=30,
+                       candidate_cap=32, universe=64, k=8, rerank_chunk=128)
+
+
+@pytest.mark.parametrize("rerank_impl", ["fused", "scan"])
+def test_query_index_probe_impls_bit_identical(cfg, small, rerank_impl):
+    data, queries = small
+    cfg = dataclasses.replace(cfg, rerank_impl=rerank_impl)
+    state = build_index(cfg, KEY, data)
+    d0, i0 = query_index(
+        dataclasses.replace(cfg, probe_impl="staged"), state, queries)
+    d1, i1 = query_index(cfg, state, queries)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_query_index_compact_bit_identical(cfg, small):
+    data, queries = small
+    state = build_index(cfg, KEY, data)
+    d0, i0 = query_index(cfg, state, queries)
+    for floor in (16, 64, 4096):   # tiny, typical, bigger-than-worst-case
+        d1, i1 = query_index_compact(cfg, state, queries, floor=floor)
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_probe_candidates_same_set_after_dedup(cfg, small):
+    data, queries = small
+    state = build_index(cfg, KEY, data)
+    n = data.shape[0]
+    args = (state.params, state.template, state.sorted_keys,
+            state.sorted_ids, n, queries)
+    staged = pipe.probe_candidates(
+        dataclasses.replace(cfg, probe_impl="staged"), *args, dedup=True)
+    fused = pipe.probe_candidates(cfg, *args, dedup=True)
+    np.testing.assert_array_equal(np.asarray(staged), np.asarray(fused))
+
+
+def test_segmented_query_compact_bit_identical(cfg, small):
+    data, queries = small
+    data_np = np.asarray(data)
+    idx = SegmentedIndex.from_dataset(cfg, KEY, jnp.asarray(data_np[:1500]),
+                                      delta_cap=256)
+    idx.insert(data_np[1500:])                 # seals segments + delta
+    idx.delete([1, 2, 2000])
+    d0, i0 = idx.query(queries)
+    d1, i1, used = idx.query_compact(queries)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    full = cfg.num_tables * cfg.probes_per_table * cfg.candidate_cap
+    assert used and all(cb <= full for _, cb in used)
+    ladders = idx.candidate_ladders()
+    assert len(ladders) == idx.num_segments
+    for (size, cb), ladder in zip(used, ladders):
+        assert cb in ladder
+
+
+def test_max_bucket_occupancy():
+    keys = np.asarray([[1, 1, 1, 2, 3], [4, 5, 5, 6, 7]], np.uint32)
+    assert pipe.max_bucket_occupancy(keys) == 3
+    assert pipe.max_bucket_occupancy(np.zeros((2, 0), np.uint32)) == 1
+    assert pipe.max_bucket_occupancy(np.asarray([[1, 2, 3]])) == 1
+    cfg = IndexConfig(candidate_cap=2)
+    assert pipe.oracle_candidate_cap(cfg, keys) == 3
+
+
+def test_candidate_ladder_and_bucket():
+    assert pipe.candidate_ladder(1000, floor=64) == (64, 128, 256, 512, 1000)
+    assert pipe.candidate_ladder(64, floor=64) == (64,)
+    assert pipe.candidate_ladder(40, floor=64) == (40,)
+    assert pipe.candidate_bucket(0, 1000, 64) == 64
+    assert pipe.candidate_bucket(129, 1000, 64) == 256
+    assert pipe.candidate_bucket(900, 1000, 64) == 1000
+
+
+# ---------------------------------------------------------------------------
+# 3. serving parity
+# ---------------------------------------------------------------------------
+
+def test_engine_compact_probe_smoke(cfg, small):
+    from repro.serve.engine import AnnServingEngine, ServeConfig
+
+    data, queries = small
+    qn = np.asarray(queries)
+    mk = lambda compact: AnnServingEngine(
+        cfg, ServeConfig(batch_size=8, bucket_min=2, delta_cap=64,
+                         compact_probe=compact, cand_bucket_min=64,
+                         persistent_cache=False), data)
+    eng_c, eng_f = mk(True), mk(False)
+    cold_after_warm = eng_c.stats["bucket_cold_hits"]
+    for engine in (eng_c, eng_f):
+        engine.submit(qn[:3]); engine.submit(qn[3:])
+    dc, ic = eng_c.drain()
+    df, if_ = eng_f.drain()
+    np.testing.assert_array_equal(dc, df)
+    np.testing.assert_array_equal(ic, if_)
+    # the (batch-bucket x candidate-bucket) warmup grid covered every live
+    # shape: no unplanned recompiles
+    assert eng_c.stats["bucket_cold_hits"] == cold_after_warm
+    s = eng_c.summary()
+    assert s["cand_buckets"] and "compile_cache" in s
