@@ -221,7 +221,9 @@ class ShardReplica:
         state = build_index(self.cfg, self.key, dataset)
         index = SegmentedIndex.from_checkpoint(
             self.cfg, state, jnp.asarray(snap["gids"]),
-            int(snap["next_gid"]), delta_cap=self.serve_cfg.delta_cap)
+            int(snap["next_gid"]), delta_cap=self.serve_cfg.delta_cap,
+            cap_quantile=self.serve_cfg.cand_cap_quantile,
+            cap_sample=self.serve_cfg.cand_cap_sample)
         self.engine = AnnServingEngine(self.cfg, self.serve_cfg, index=index)
         self._last_snap_compactions = self.engine.index.compactions
         self.last_seq = int(snap["wal_seq"])
@@ -263,7 +265,9 @@ class ShardReplica:
         state = build_index(self.cfg, self.key, jnp.asarray(dataset))
         index = SegmentedIndex.from_checkpoint(
             self.cfg, state, jnp.asarray(gids), next_gid,
-            delta_cap=self.serve_cfg.delta_cap)
+            delta_cap=self.serve_cfg.delta_cap,
+            cap_quantile=self.serve_cfg.cand_cap_quantile,
+            cap_sample=self.serve_cfg.cand_cap_sample)
         self.engine = AnnServingEngine(self.cfg, self.serve_cfg, index=index)
         self.last_seq = peer.last_seq
         self._last_snap_compactions = self.engine.index.compactions

@@ -652,6 +652,19 @@ class ClusterRouter:
                         dict(sorted(
                             rep.engine.stats["cand_buckets"].items()))
                         if rep.alive else None),
+                    # two-level compaction skew telemetry (DESIGN.md §9):
+                    # overflow-rung hits and truncated candidates roll up
+                    # per replica so fleet-wide skew regressions are one
+                    # summary() away
+                    "overflow_hits": (
+                        rep.engine.stats["overflow_hits"]
+                        if rep.alive else None),
+                    "truncated_candidates": (
+                        rep.engine.stats["truncated_candidates"]
+                        if rep.alive else None),
+                    "skew_segments": (
+                        rep.engine.index.skew_summary()
+                        if rep.alive else None),
                 } for rep in group],
             })
         return {

@@ -77,6 +77,14 @@ class IndexState:
                   ``side='right'`` search.  Optional (None on legacy/
                   abstract states; the extents then fall back to the
                   two-sided search).
+    occ_hist    : (L, 32) int32   per-table bucket-occupancy histogram in
+                  ceil-log2 bins (bin b = buckets with occupancy in
+                  (2^(b-1), 2^b]), computed once at build/compaction.  The
+                  two-level compaction policy (DESIGN.md §9) derives its
+                  per-bucket cap from a high quantile of this histogram
+                  (``pipeline.occupancy_quantile``) instead of the global
+                  max bucket, so one hot bucket stops inflating every
+                  query's ladder.  Optional like ``occ_from``.
     """
 
     params: hashes_lib.LshParams
@@ -86,11 +94,13 @@ class IndexState:
     template: jax.Array
     row_offset: jax.Array
     occ_from: Optional[jax.Array] = None
+    occ_hist: Optional[jax.Array] = None
 
     def tree_flatten(self):
         return (
             self.params, self.sorted_keys, self.sorted_ids,
             self.dataset, self.template, self.row_offset, self.occ_from,
+            self.occ_hist,
         ), None
 
     @classmethod
@@ -148,6 +158,7 @@ def build_index(
     sorted_ids = order.astype(jnp.int32)
     if template is None:
         template = jnp.asarray(make_template(cfg))
+    occ_from = _run_lengths(sorted_keys)
     return IndexState(
         params=params,
         sorted_keys=sorted_keys,
@@ -155,7 +166,8 @@ def build_index(
         dataset=dataset,
         template=template,
         row_offset=jnp.asarray(row_offset, jnp.int32),
-        occ_from=_run_lengths(sorted_keys),
+        occ_from=occ_from,
+        occ_hist=_occ_histogram(sorted_keys, occ_from),
     )
 
 
@@ -170,6 +182,36 @@ def _run_lengths(sorted_keys: jax.Array) -> jax.Array:
         lambda sk: jnp.searchsorted(sk, sk, side="right"))(sorted_keys)
     return (run_end - jnp.arange(n, dtype=run_end.dtype)[None, :]
             ).astype(jnp.int32)
+
+
+OCC_HIST_BINS = 32  # bin b: occupancy in (2^(b-1), 2^b]; bin 31 also > 2^30
+
+
+def _occ_histogram(sorted_keys: jax.Array, occ_from: jax.Array) -> jax.Array:
+    """(L, 32) bucket-occupancy histogram in ceil-log2 bins (§9).
+
+    Counts *buckets* (equal-key runs), not rows: each run start contributes
+    one count to the bin of its run length.  Ceil-log2 binning matches the
+    pow-2 rung discipline — ``pipeline.occupancy_quantile`` reads a
+    per-bucket cap straight off the bin edges.  Shard-local and additive,
+    so the distributed build just psums it.
+    """
+    l, n = sorted_keys.shape
+    if n == 0:
+        return jnp.zeros((l, OCC_HIST_BINS), jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((l, 1), bool),
+         sorted_keys[:, 1:] != sorted_keys[:, :-1]], axis=1)
+    # ceil-log2 bin of each run length; int32-safe edges up to 2^30 (a run
+    # longer than that lands in the top bin anyway).
+    edges = jnp.asarray(2 ** np.arange(31, dtype=np.int64), jnp.int32)
+    bins = jnp.searchsorted(edges, occ_from, side="left")
+    bins = jnp.minimum(bins, OCC_HIST_BINS - 1)
+    # non-starts go to a spill column that is sliced off
+    bins = jnp.where(is_start, bins, OCC_HIST_BINS)
+    hist = (bins[:, :, None]
+            == jnp.arange(OCC_HIST_BINS, dtype=bins.dtype)).sum(axis=1)
+    return hist.astype(jnp.int32)
 
 
 # --------------------------------------------------------------------------
@@ -213,31 +255,35 @@ def query_index(cfg: IndexConfig, state: IndexState, queries: jax.Array):
 
 @partial(jax.jit, static_argnums=0)
 def probe_index(cfg: IndexConfig, state: IndexState, queries: jax.Array):
-    """Phase A: probe keys + clamped bucket extents + candidate counts.
+    """Phase A: probe keys + raw bucket extents + candidate counts.
 
-    Returns (probe_keys (Q, L, P), lo (Q, L*P), cnt (Q, L*P),
-    counts (Q,)).  The extents cross the host-side bucket pick so phase B
-    never re-searches (XLA backends); the probe keys ride along for the
-    Pallas executor, which re-searches in VMEM instead (each backend's
-    unused input is dead-code-eliminated).
+    Returns (probe_keys (Q, L, P), lo (Q, L*P), occ (Q, L*P) raw bucket
+    occupancies, counts (Q,)).  The extents cross the host-side rung pick
+    so phase B never re-searches (XLA backends); the probe keys ride along
+    for the Pallas executor, which re-searches in VMEM instead (each
+    backend's unused input is dead-code-eliminated).
     """
     bucket, x_neg = pipe.stage_hash(cfg, state.params, queries)
     probe_keys = pipe.stage_probe_keys(
         cfg, state.params, state.template, bucket, x_neg)
-    lo, cum, counts = pipe.stage_probe_extents(
+    lo, occ, counts = pipe.stage_probe_extents(
         cfg, state.sorted_keys, probe_keys, state.occ_from)
-    return probe_keys, lo, cum, counts
+    return probe_keys, lo, occ, counts
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def finish_index(cfg: IndexConfig, cbucket: int, state: IndexState,
-                 probe_keys: jax.Array, lo: jax.Array, cum: jax.Array,
-                 queries: jax.Array):
-    """Phase B: compacted gather at the (static) candidate bucket + rerank."""
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def finish_index(cfg: IndexConfig, cbucket: int, c_cap: Optional[int],
+                 state: IndexState, probe_keys: jax.Array, lo: jax.Array,
+                 occ: jax.Array, queries: jax.Array):
+    """Phase B: compacted gather at the (static) rung + rerank.
+
+    ``c_cap=None`` keeps the full per-bucket clamp (exact); an int is the
+    two-level truncate rung's tighter cap (DESIGN.md §9).
+    """
     n = state.dataset.shape[0]
     ids, _ = pipe.stage_fused_probe(
         cfg, state.sorted_keys, state.sorted_ids, probe_keys, n, cbucket,
-        extents=(lo, cum))
+        extents=(lo, occ), c_cap=c_cap)
     if not pipe.rerank_handles_duplicates(cfg):
         ids = pipe.stage_dedup(ids, n)
     d, i = pipe.stage_rerank(cfg, state.dataset, queries, ids)
@@ -247,16 +293,24 @@ def finish_index(cfg: IndexConfig, cbucket: int, state: IndexState,
 
 def query_index_compact(cfg: IndexConfig, state: IndexState,
                         queries: jax.Array, floor: int = 64,
-                        ctot_cap: Optional[int] = None):
-    """Two-phase compacted query; bit-identical to ``query_index``.
+                        ctot_cap: Optional[int] = None,
+                        ctot_norm: Optional[int] = None,
+                        c_cap: Optional[int] = None,
+                        overflow: str = "escalate"):
+    """Two-phase compacted query; bit-identical to ``query_index`` on the
+    normal and ``escalate`` paths.
 
     ``ctot_cap`` bounds the ladder top (pass
     ``pipe.max_bucket_occupancy``-derived caps when known); defaults to the
-    static worst case L*P*C.
+    static worst case L*P*C.  ``ctot_norm``/``c_cap``/``overflow`` enable
+    the two-level ladder (DESIGN.md §9): batches whose max count exceeds
+    ``ctot_norm`` either escalate to the exact ``ctot_cap`` rung or run the
+    bounded ``(ctot_norm, c_cap)`` truncate rung.
     """
     if ctot_cap is None:
         ctot_cap = (cfg.num_tables * cfg.probes_per_table
                     * cfg.candidate_cap)
-    probe_keys, lo, cum, counts = probe_index(cfg, state, queries)
-    cb = pipe.candidate_bucket(int(counts.max()), ctot_cap, floor)
-    return finish_index(cfg, cb, state, probe_keys, lo, cum, queries)
+    probe_keys, lo, occ, counts = probe_index(cfg, state, queries)
+    cb, cc, _ = pipe.pick_rung(int(counts.max()), ctot_cap, floor,
+                               ctot_norm, c_cap, overflow)
+    return finish_index(cfg, cb, cc, state, probe_keys, lo, occ, queries)

@@ -77,8 +77,11 @@ __all__ = [
     "l1_distance_chunked",
     "max_bucket_occupancy",
     "oracle_candidate_cap",
+    "occupancy_quantile",
     "candidate_ladder",
     "candidate_bucket",
+    "rung_ladder",
+    "pick_rung",
 ]
 
 # Sentinel distance for invalid/padded slots; iinfo//2 so two of them still
@@ -150,17 +153,18 @@ def stage_candidate_gather(
 
 def stage_probe_extents(cfg, sorted_keys: jax.Array, probe_keys: jax.Array,
                         occ_from=None):
-    """Clamped bucket extents + per-query candidate counts — the fused
+    """Raw bucket extents + per-query candidate counts — the fused
     front-end's phase A.
 
-    Returns (lo (Q, L*P) int32, csum (Q, L*P) int32 — inclusive prefix sum
-    of the clamped per-bucket counts min(hi-lo, cap) — and counts (Q,)
-    int32).  The two-phase serving path runs this as its own jitted phase,
-    pulls ``counts.max()`` to the host, picks a pow-2 candidate bucket
-    (``candidate_bucket``), and hands (lo, csum) back to
-    ``stage_fused_probe`` so the gather phase neither re-searches nor
-    re-scans.  The counts are exactly what the fused probe kernel reports,
-    so a bucket >= the max count can never truncate.
+    Returns (lo (Q, L*P) int32, occ (Q, L*P) int32 — *unclamped* per-bucket
+    occupancies — and counts (Q,) int32 totals under ``cfg.candidate_cap``).
+    The two-phase serving path runs this as its own jitted phase, pulls
+    ``counts.max()`` to the host, picks a rung (``pick_rung``), and hands
+    (lo, occ) back to ``stage_fused_probe`` so the gather phase neither
+    re-searches nor re-scans.  The counts are exactly what the fused probe
+    kernel reports, so a bucket >= the max count can never truncate; the
+    raw occupancies let the overflow rung apply a tighter per-bucket cap
+    (``c_cap``) to the same extents (DESIGN.md §9).
 
     ``occ_from`` (``IndexState.occ_from``, the build-time run-length table)
     replaces the ``side='right'`` search with two gathers — pass it on the
@@ -179,7 +183,7 @@ def stage_probe_counts(cfg, sorted_keys: jax.Array, probe_keys: jax.Array,
 def stage_fused_probe(
     cfg, sorted_keys: jax.Array, sorted_ids: jax.Array,
     probe_keys: jax.Array, n: int, cbucket: Optional[int] = None,
-    extents=None,
+    extents=None, c_cap: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused bucket-lookup + compacted candidate gather (DESIGN.md §8).
 
@@ -190,13 +194,18 @@ def stage_fused_probe(
     caller-picked static ``cbucket`` shrinks the slab the rerank pays for.
     ``cbucket`` must cover the actual counts or the tail candidates are
     dropped (callers derive it from ``stage_probe_extents``, whose (lo,
-    cnt) pair can be passed back here as ``extents`` to skip the re-search
-    on XLA backends).
+    occ) pair can be passed back here as ``extents`` to skip the re-search
+    on XLA backends).  ``c_cap`` tightens the per-bucket cap below
+    ``cfg.candidate_cap`` — the two-level truncate rung (DESIGN.md §9);
+    truncation is the deterministic sorted-order prefix of each bucket.
     """
+    cap = cfg.candidate_cap
+    if c_cap is not None:
+        cap = min(cap, max(1, int(c_cap)))
     if cbucket is None:
-        cbucket = cfg.num_tables * cfg.probes_per_table * cfg.candidate_cap
+        cbucket = cfg.num_tables * cfg.probes_per_table * cap
     return kops.fused_probe(
-        sorted_keys, sorted_ids, probe_keys, cfg.candidate_cap, cbucket,
+        sorted_keys, sorted_ids, probe_keys, cap, cbucket,
         extents=extents)
 
 
@@ -245,6 +254,27 @@ def oracle_candidate_cap(cfg, sorted_keys, occ_from=None) -> int:
     return max(cfg.candidate_cap, max_bucket_occupancy(sorted_keys, occ_from))
 
 
+def occupancy_quantile(occ_hist, q: float = 0.999) -> int:
+    """Bucket-weighted occupancy quantile from ``IndexState.occ_hist``.
+
+    ``occ_hist`` (L, B) counts non-empty buckets per ceil-log2 occupancy
+    bin (bin b holds buckets with occupancy in (2^(b-1), 2^b]).  Returns
+    the pow-2 upper edge of the first bin whose cumulative bucket count
+    reaches quantile ``q`` — i.e. a per-bucket cap that leaves at most a
+    ``1-q`` fraction of buckets truncated.  Pow-2 by construction, which
+    is the static-stride rung discipline the per-bucket cap ladder wants
+    (DESIGN.md §9).  Host-side; call at segment seal, not per query.
+    """
+    h = np.asarray(occ_hist).reshape(-1, np.asarray(occ_hist).shape[-1])
+    h = h.sum(axis=0).astype(np.int64)                  # (B,) over tables
+    total = int(h.sum())
+    if total == 0:
+        return 1
+    target = int(np.ceil(min(max(q, 0.0), 1.0) * total))
+    b = int(np.searchsorted(np.cumsum(h), max(target, 1)))
+    return 1 << min(b, 31)
+
+
 def candidate_ladder(ctot_cap: int, floor: int = 64) -> Tuple[int, ...]:
     """Pow-2 candidate-count buckets [floor, 2*floor, ...] topped by
     ``ctot_cap`` (the shard's real worst case, which may not be pow-2).
@@ -266,11 +296,82 @@ def candidate_ladder(ctot_cap: int, floor: int = 64) -> Tuple[int, ...]:
 
 
 def candidate_bucket(count: int, ctot_cap: int, floor: int = 64) -> int:
-    """Smallest ladder rung covering ``count`` valid candidates."""
-    for b in candidate_ladder(ctot_cap, floor):
-        if count <= b:
-            return b
-    return max(1, int(ctot_cap))
+    """Smallest ladder rung covering ``count`` valid candidates.
+
+    O(1) bit-length arithmetic, not a ladder scan: the rung is the pow-2
+    ceiling of ``max(count, floor)``, clipped to the ladder's non-pow-2
+    top ``ctot_cap``.  Matches ``candidate_ladder`` exactly (pinned by
+    tests) — the ladder enumerates rungs for warmup, this picks one per
+    batch on the serving hot path.
+    """
+    ctot_cap = max(1, int(ctot_cap))
+    need = max(1, int(count), int(floor))
+    b = 1 << (need - 1).bit_length()
+    return b if b < ctot_cap else ctot_cap
+
+
+def rung_ladder(ctot_cap: int, floor: int = 64,
+                ctot_norm: Optional[int] = None,
+                c_cap: Optional[int] = None,
+                overflow: str = "escalate",
+                ) -> Tuple[Tuple[int, Optional[int]], ...]:
+    """Two-level rung ladder: ``((cbucket, c_cap or None), ...)``.
+
+    ``c_cap=None`` means the full ``cfg.candidate_cap`` per-bucket clamp
+    (exact, bit-identical to the uncompacted query).  Without a
+    ``ctot_norm`` this degenerates to the PR-5 single-level ladder.  With
+    one, the normal rungs stop at ``ctot_norm`` — the high quantile of
+    *realized* per-query candidate totals, not the global-max-bucket worst
+    case — and exactly one overflow rung handles hot-bucket queries:
+
+    * ``overflow='escalate'``: the overflow rung is ``(ctot_cap, None)`` —
+      exact but expensive; correctness-default.
+    * ``overflow='truncate'``: the overflow rung is ``(ctot_norm, c_cap)``
+      — hot buckets are prefix-truncated to ``c_cap`` rows each so the
+      slab stays at ``ctot_norm``; bounded cost, <=0.5%-recall knob
+      (``ServeConfig.cand_overflow``).
+
+    Either way the intermediate pow-2 rungs between ``ctot_norm`` and
+    ``ctot_cap`` vanish from the warmup grid.
+    """
+    ctot_cap = max(1, int(ctot_cap))
+    if not ctot_norm or int(ctot_norm) >= ctot_cap:
+        return tuple((b, None) for b in candidate_ladder(ctot_cap, floor))
+    ctot_norm = max(1, int(ctot_norm))
+    rungs = [(b, None) for b in candidate_ladder(ctot_norm, floor)]
+    if overflow == "escalate":
+        rungs.append((ctot_cap, None))
+    elif overflow == "truncate":
+        rungs.append((ctot_norm, max(1, int(c_cap)) if c_cap else None))
+    else:
+        raise ValueError(f"unknown overflow policy: {overflow!r}")
+    return tuple(rungs)
+
+
+def pick_rung(count: int, ctot_cap: int, floor: int = 64,
+              ctot_norm: Optional[int] = None,
+              c_cap: Optional[int] = None,
+              overflow: str = "escalate",
+              ) -> Tuple[int, Optional[int], bool]:
+    """Pick the ``rung_ladder`` rung for a batch's max candidate count.
+
+    Returns ``(cbucket, c_cap or None, overflowed)``.  This is the one
+    host-side decision of the two-phase query: ``count`` is the single
+    scalar phase A transfers, and every return value here is a member of
+    ``rung_ladder(...)`` with the same arguments — so the warmup grid
+    covers every live pick.
+    """
+    ctot_cap = max(1, int(ctot_cap))
+    if not ctot_norm or int(ctot_norm) >= ctot_cap:
+        return candidate_bucket(count, ctot_cap, floor), None, False
+    ctot_norm = max(1, int(ctot_norm))
+    if count <= ctot_norm:
+        return candidate_bucket(count, ctot_norm, floor), None, False
+    if overflow == "escalate":
+        return ctot_cap, None, True
+    if overflow == "truncate":
+        return ctot_norm, max(1, int(c_cap)) if c_cap else None, True
+    raise ValueError(f"unknown overflow policy: {overflow!r}")
 
 
 def rerank_handles_duplicates(cfg) -> bool:
@@ -322,28 +423,31 @@ def probe_candidates(
     cfg, params: hashes_lib.LshParams, template: jax.Array,
     sorted_keys: jax.Array, sorted_ids: jax.Array, n: int,
     queries: jax.Array, dedup: Optional[bool] = None,
-    cbucket: Optional[int] = None,
+    cbucket: Optional[int] = None, c_cap: Optional[int] = None,
 ) -> jax.Array:
     """hash -> probe-gen -> lookup+gather [-> dedup], composed.
 
     Returns candidate local ids, sentinel n.  The lookup+gather runs per
     ``cfg.probe_impl``: 'fused' (default) uses the fused front-end kernel
     (valid candidates packed first; slab width ``cbucket`` when given, else
-    the worst-case L*P*C), 'staged' the legacy two-stage pair at fixed
-    L*P*C width (``cbucket`` unsupported there).  ``dedup`` defaults to
-    cfg-driven: the sorting dedup only runs when the configured rerank impl
-    does not dedup internally (``rerank_handles_duplicates``); the fused
-    rerank consumes the raw gather and masks duplicates in-kernel.
+    the worst-case L*P*C; per-bucket cap tightened to ``c_cap`` when given
+    — the two-level truncate rung), 'staged' the legacy two-stage pair at
+    fixed L*P*C width (``cbucket``/``c_cap`` unsupported there).  ``dedup``
+    defaults to cfg-driven: the sorting dedup only runs when the configured
+    rerank impl does not dedup internally (``rerank_handles_duplicates``);
+    the fused rerank consumes the raw gather and masks duplicates
+    in-kernel.
     """
     bucket, x_neg = stage_hash(cfg, params, queries)
     probe_keys = stage_probe_keys(cfg, params, template, bucket, x_neg)
     impl = getattr(cfg, "probe_impl", "fused")
     if impl == "fused":
         ids, _ = stage_fused_probe(
-            cfg, sorted_keys, sorted_ids, probe_keys, n, cbucket)
+            cfg, sorted_keys, sorted_ids, probe_keys, n, cbucket,
+            c_cap=c_cap)
     elif impl == "staged":
-        if cbucket is not None:
-            raise ValueError("cbucket compaction requires probe_impl='fused'")
+        if cbucket is not None or c_cap is not None:
+            raise ValueError("slab compaction requires probe_impl='fused'")
         lo, hi = stage_bucket_lookup(sorted_keys, probe_keys)
         ids = stage_candidate_gather(cfg, sorted_ids, lo, hi, n)
     else:

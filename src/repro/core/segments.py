@@ -58,6 +58,14 @@ class Segment:
     ctot_cap: int = 0                 # worst-case valid candidates per query:
                                       # L*P*min(cap, max bucket occupancy);
                                       # 0 = not yet derived (see _seg_ctot_cap)
+    ctot_norm: int = 0                # normal-rung ladder top: pow-2 headroom
+                                      # over the sampled high quantile of
+                                      # realized per-query candidate totals
+                                      # (DESIGN.md §9); 0 = not yet derived
+                                      # (SegmentedIndex._ensure_caps, lazy)
+    c_norm: int = 0                   # per-bucket cap of the truncate
+                                      # overflow rung (occupancy-histogram
+                                      # quantile); 0 = not yet derived
 
     @property
     def size(self) -> int:
@@ -107,20 +115,36 @@ def _query_segment(cfg: IndexConfig, state: IndexState, gids: jax.Array,
 _probe_segment = probe_index
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def _finish_segment(cfg: IndexConfig, cbucket: int, state: IndexState,
-                    gids: jax.Array, tombstones: jax.Array,
-                    probe_keys: jax.Array, lo: jax.Array, cum: jax.Array,
+@partial(jax.jit, static_argnums=(2, 3))
+def _truncated_total(occ: jax.Array, counts: jax.Array, c_cap: int,
+                     cbucket: int):
+    """Candidates dropped by the truncate rung vs the full-cap gather.
+
+    ``counts`` are phase A's totals under the full cap; the rung gathers
+    ``min(sum min(occ, c_cap), cbucket)`` per query.  Observability only
+    (engine stats) — runs solely on the rare overflow path.
+    """
+    got = jnp.minimum(jnp.minimum(occ, c_cap).sum(axis=-1), cbucket)
+    return (counts - got).sum()
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _finish_segment(cfg: IndexConfig, cbucket: int, c_cap: Optional[int],
+                    state: IndexState, gids: jax.Array, tombstones: jax.Array,
+                    probe_keys: jax.Array, lo: jax.Array, occ: jax.Array,
                     queries: jax.Array):
-    """Compaction phase B: compacted gather at the (static) candidate bucket
+    """Compaction phase B: compacted gather at the (static) rung
     -> [dedup ->] tombstone -> rerank -> gid map.  Same stage order as
     ``_query_segment``, so results are bit-identical at any non-truncating
-    ``cbucket`` — only the padding lanes the rerank pays for shrink.
+    ``cbucket`` with ``c_cap=None`` — only the padding lanes the rerank
+    pays for shrink.  An int ``c_cap`` is the two-level truncate rung's
+    tighter per-bucket cap (deterministic sorted-prefix truncation,
+    DESIGN.md §9).
     """
     n = state.dataset.shape[0]
     ids, _ = pipe.stage_fused_probe(
         cfg, state.sorted_keys, state.sorted_ids, probe_keys, n, cbucket,
-        extents=(lo, cum))
+        extents=(lo, occ), c_cap=c_cap)
     if not pipe.rerank_handles_duplicates(cfg):
         ids = pipe.stage_dedup(ids, n)
     ids = pipe.stage_tombstone(ids, gids, tombstones, n)
@@ -156,12 +180,20 @@ class SegmentedIndex:
 
     def __init__(self, cfg: IndexConfig, key: jax.Array, dim: int,
                  delta_cap: int = 1024,
-                 params: Optional[hashes_lib.LshParams] = None):
+                 params: Optional[hashes_lib.LshParams] = None,
+                 cap_quantile: float = 0.999, cap_sample: int = 32):
         if params is None:
             params = make_params(cfg, key, dim)
         self.cfg = cfg
         self.dim = dim
         self.delta_cap = int(delta_cap)
+        # two-level compaction policy (DESIGN.md §9): occupancy-histogram
+        # quantile for the per-bucket cap, and how many of the segment's
+        # own rows to probe as surrogate queries when sizing the normal
+        # ladder top from realized candidate totals.  quantile >= 1
+        # disables the second level (single-level PR-5 ladder).
+        self.cap_quantile = float(cap_quantile)
+        self.cap_sample = int(cap_sample)
         self.params = params
         self.fingerprint = hashes_lib.params_fingerprint(params)
         # cfg-only-dependent; computed once, reused by every seal/compact
@@ -182,6 +214,7 @@ class SegmentedIndex:
     def from_dataset(cls, cfg: IndexConfig, key: jax.Array,
                      dataset: jax.Array, delta_cap: int = 1024,
                      params: Optional[hashes_lib.LshParams] = None,
+                     cap_quantile: float = 0.999, cap_sample: int = 32,
                      ) -> "SegmentedIndex":
         """Seed with one segment holding ``dataset`` (gids 0..n-1).
 
@@ -189,7 +222,8 @@ class SegmentedIndex:
         """
         dataset = jnp.asarray(dataset)
         n, dim = dataset.shape
-        idx = cls(cfg, key, int(dim), delta_cap, params)
+        idx = cls(cfg, key, int(dim), delta_cap, params,
+                  cap_quantile=cap_quantile, cap_sample=cap_sample)
         state = build_index(cfg, key, dataset, params=idx.params,
                             template=idx._template)
         idx.segments = [Segment(state=state,
@@ -202,7 +236,9 @@ class SegmentedIndex:
     @classmethod
     def from_checkpoint(cls, cfg: IndexConfig, state: IndexState,
                         gids: jax.Array, next_gid,
-                        delta_cap: int = 1024) -> "SegmentedIndex":
+                        delta_cap: int = 1024,
+                        cap_quantile: float = 0.999,
+                        cap_sample: int = 32) -> "SegmentedIndex":
         """Rebuild a serving index from a ``checkpoint_payload()`` triple.
 
         ``next_gid`` must come from the payload — recomputing it as
@@ -212,7 +248,8 @@ class SegmentedIndex:
         """
         gids = jnp.asarray(gids, jnp.int32)
         idx = cls(cfg, jax.random.PRNGKey(0), int(state.dataset.shape[1]),
-                  delta_cap, params=state.params)
+                  delta_cap, params=state.params,
+                  cap_quantile=cap_quantile, cap_sample=cap_sample)
         idx.segments = [Segment(state=state, gids=gids,
                                 fingerprint=idx.fingerprint,
                                 ctot_cap=_seg_ctot_cap(cfg, state))]
@@ -433,32 +470,123 @@ class SegmentedIndex:
                                          use_kernel=use_merge_kernel)
         return d, i
 
-    # -- compacted query (DESIGN.md §8) ------------------------------------
+    # -- compacted query (DESIGN.md §8, two-level §9) ----------------------
 
-    def candidate_ladders(self, floor: int = 64):
-        """Per-segment candidate-bucket ladders, aligned with ``segments``.
+    def _ensure_caps(self, seg: Segment) -> None:
+        """Derive the segment's two-level caps (lazy; once per seal).
 
+        ``c_norm`` comes from the build-time occupancy histogram
+        (``pipe.occupancy_quantile`` at ``cap_quantile``) — the per-bucket
+        cap that leaves all but the hot tail of buckets untouched.
+        ``ctot_norm`` — the normal-rung ladder top — comes from *realized*
+        per-query candidate totals: ``cap_sample`` of the segment's own
+        rows are probed as surrogate queries and the p90 of their totals
+        **under the c_norm cap** gets 2x pow-2 headroom.  Both clamps are
+        load-bearing: the per-bucket cap tames *depth* (a probe landing in
+        a hot bucket contributes at most ``c_norm``, however deep it is),
+        the p90 tames *breadth* (a surrogate from a dense cluster touches
+        many occupied buckets the cap can't shrink) — either outlier alone
+        would drag ``ctot_norm`` right back to the worst case, which is
+        the exact failure this PR removes.  Queries past the p90 land on
+        the overflow rung, which is that rung's whole job.
+        Derivation is lazy (first compact query / warmup), so indexes that
+        never use the compact path pay nothing.
+        """
+        if seg.ctot_norm or seg.size == 0:
+            return
+        cfg = self.cfg
+        state = seg.state
+        if not seg.ctot_cap:
+            seg.ctot_cap = _seg_ctot_cap(cfg, state)
+        lp = cfg.num_tables * cfg.probes_per_table
+        c_full = max(1, seg.ctot_cap // lp)
+        if state.occ_hist is None or self.cap_quantile >= 1.0:
+            # legacy state (no histogram) or policy disabled: single-level
+            seg.ctot_norm, seg.c_norm = seg.ctot_cap, c_full
+            return
+        c_norm = max(1, min(c_full, pipe.occupancy_quantile(
+            state.occ_hist, self.cap_quantile)))
+        ctot_norm = lp * c_norm
+        s = min(self.cap_sample, seg.size)
+        if s > 0:
+            stride = max(1, seg.size // s)
+            sample = state.dataset[::stride][:s].astype(jnp.int32)
+            _, _, occ, _ = _probe_segment(cfg, state, sample)
+            totals = np.minimum(np.asarray(occ), c_norm).sum(axis=-1)
+            realized = int(np.percentile(totals, 90))
+            ctot_norm = min(ctot_norm,
+                            1 << max(0, 2 * realized - 1).bit_length())
+        seg.ctot_norm = max(1, min(ctot_norm, seg.ctot_cap))
+        seg.c_norm = c_norm
+
+    def skew_summary(self):
+        """Per-segment occupancy/cap snapshot for serving metrics.
+
+        One dict per segment: size, the derived caps (None until
+        ``_ensure_caps`` ran), and bucket-occupancy quantiles off the
+        build-time histogram — the signals that make a skew regression
+        visible in ``engine.summary()`` before it costs latency.
+        """
+        out = []
+        for seg in self.segments:
+            entry = {
+                "size": seg.size,
+                "ctot_cap": seg.ctot_cap or None,
+                "ctot_norm": seg.ctot_norm or None,
+                "c_norm": seg.c_norm or None,
+            }
+            hist = seg.state.occ_hist
+            if hist is not None and seg.size:
+                entry["occ_quantiles"] = {
+                    "p50": pipe.occupancy_quantile(hist, 0.5),
+                    "p99": pipe.occupancy_quantile(hist, 0.99),
+                    "p999": pipe.occupancy_quantile(hist, 0.999),
+                    "max": pipe.max_bucket_occupancy(
+                        seg.state.sorted_keys, seg.state.occ_from),
+                }
+            out.append(entry)
+        return out
+
+    def candidate_ladders(self, floor: int = 64, overflow: str = "escalate"):
+        """Per-segment rung ladders, aligned with ``segments``.
+
+        Each ladder is a tuple of ``(cbucket, c_cap or None)`` rungs
+        (``pipe.rung_ladder``): pow-2 normal rungs up to the segment's
+        ``ctot_norm`` plus one overflow rung per ``overflow`` policy.
         Zero-point segments have no probe front-end and get an empty
         ladder.  The engine pre-compiles the gather phase at every rung
-        (warmup's (batch-bucket x candidate-bucket) grid).
+        (warmup's (batch-bucket x rung) grid) — two-level shrinks this
+        grid, since the pow-2 rungs between ``ctot_norm`` and the
+        worst-case ``ctot_cap`` no longer exist.
         """
-        return tuple(
-            pipe.candidate_ladder(seg.ctot_cap or _seg_ctot_cap(
-                self.cfg, seg.state), floor) if seg.size else ()
-            for seg in self.segments)
+        ladders = []
+        for seg in self.segments:
+            if not seg.size:
+                ladders.append(())
+                continue
+            self._ensure_caps(seg)
+            ladders.append(pipe.rung_ladder(
+                seg.ctot_cap, floor, seg.ctot_norm, seg.c_norm, overflow))
+        return tuple(ladders)
 
     def query_compact(self, queries: jax.Array, floor: int = 64,
-                      use_merge_kernel: bool = True):
+                      use_merge_kernel: bool = True,
+                      overflow: str = "escalate", stats=None):
         """``query`` with the fused+compacted probe front-end.
 
-        Per segment: one jitted probe phase (probe keys + counts), one
-        scalar host read to pick the pow-2 candidate bucket, then the
-        jitted gather+rerank phase at that (static) width — small/sparse
-        segments stop paying the worst-case ``L*P*C`` slab.  Bit-identical
-        to ``query`` (the oracle pins it).  Returns (dists, gids,
-        used) where ``used`` is a tuple of (segment_size, cbucket) pairs —
-        the shapes this call specialized on, for the engine's honest
-        cold-hit tracking.
+        Per segment: one jitted probe phase (probe keys + extents +
+        counts), one scalar host read to pick the rung (``pipe.pick_rung``
+        — two-level, DESIGN.md §9), then the jitted gather+rerank phase at
+        that (static) rung — small/sparse segments stop paying the
+        worst-case ``L*P*C`` slab, and hot-bucket batches stop dragging
+        everyone to the worst-case rung.  Bit-identical to ``query`` on
+        the normal and ``overflow='escalate'`` paths (the oracle pins it);
+        ``overflow='truncate'`` bounds the overflow rung by per-bucket
+        prefix truncation instead.  Returns (dists, gids, used) where
+        ``used`` is a tuple of (segment_size, cbucket, c_cap or None)
+        triples — the shapes this call specialized on, for the engine's
+        honest cold-hit tracking.  ``stats``, when a dict, accumulates
+        ``overflow_hits`` and (truncate only) ``truncated_candidates``.
         """
         queries = jnp.asarray(queries)
         tomb = self._tombstone_array()
@@ -470,14 +598,22 @@ class SegmentedIndex:
                 results.append(_query_segment(
                     self.cfg, seg.state, seg.gids, tomb, queries))
                 continue
-            probe_keys, lo, cum, counts = _probe_segment(
+            self._ensure_caps(seg)
+            probe_keys, lo, occ, counts = _probe_segment(
                 self.cfg, seg.state, queries)
-            cb = pipe.candidate_bucket(
-                int(counts.max()), seg.ctot_cap, floor)
+            cb, c_cap, over = pipe.pick_rung(
+                int(counts.max()), seg.ctot_cap, floor,
+                seg.ctot_norm, seg.c_norm, overflow)
             results.append(_finish_segment(
-                self.cfg, cb, seg.state, seg.gids, tomb, probe_keys,
-                lo, cum, queries))
-            used.append((seg.size, cb))
+                self.cfg, cb, c_cap, seg.state, seg.gids, tomb, probe_keys,
+                lo, occ, queries))
+            used.append((seg.size, cb, c_cap))
+            if stats is not None and over:
+                stats["overflow_hits"] = stats.get("overflow_hits", 0) + 1
+                if c_cap is not None:
+                    dropped = int(_truncated_total(occ, counts, c_cap, cb))
+                    stats["truncated_candidates"] = (
+                        stats.get("truncated_candidates", 0) + dropped)
         if self._delta_count or not results:
             delta_pts, delta_gids = self._delta_arrays()
             results.append(_query_delta(
@@ -489,30 +625,33 @@ class SegmentedIndex:
                                          use_kernel=use_merge_kernel)
         return d, i, tuple(used)
 
-    def warm_compact(self, queries: jax.Array, floor: int = 64):
+    def warm_compact(self, queries: jax.Array, floor: int = 64,
+                     overflow: str = "escalate"):
         """Compile the compacted query path for this batch shape.
 
         Runs the probe phase once per segment and the gather phase at
         EVERY ladder rung (not just the rung this batch would pick), plus
         one full ``query_compact`` for the delta/merge executables —
-        live traffic on any candidate bucket then hits compiled code.
-        Returns every (segment_size, cbucket) pair compiled.
+        live traffic on any rung then hits compiled code
+        (``pipe.pick_rung`` only ever returns ladder members).  Returns
+        every (segment_size, cbucket, c_cap) triple compiled.
         """
         queries = jnp.asarray(queries)
         tomb = self._tombstone_array()
         warmed = []
-        for seg, ladder in zip(self.segments, self.candidate_ladders(floor)):
+        for seg, ladder in zip(self.segments,
+                               self.candidate_ladders(floor, overflow)):
             if not ladder:
                 continue
-            probe_keys, lo, cum, counts = _probe_segment(
+            probe_keys, lo, occ, counts = _probe_segment(
                 self.cfg, seg.state, queries)
             counts.block_until_ready()
-            for cb in ladder:
+            for cb, c_cap in ladder:
                 d, _ = _finish_segment(
-                    self.cfg, cb, seg.state, seg.gids, tomb, probe_keys,
-                    lo, cum, queries)
+                    self.cfg, cb, c_cap, seg.state, seg.gids, tomb,
+                    probe_keys, lo, occ, queries)
                 d.block_until_ready()
-                warmed.append((seg.size, cb))
-        d, _, used = self.query_compact(queries, floor)
+                warmed.append((seg.size, cb, c_cap))
+        d, _, used = self.query_compact(queries, floor, overflow=overflow)
         d.block_until_ready()
         return tuple(warmed) + used

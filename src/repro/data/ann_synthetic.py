@@ -14,7 +14,8 @@ from typing import Tuple
 
 import numpy as np
 
-__all__ = ["DatasetSpec", "PAPER_DATASETS", "make_dataset", "make_queries"]
+__all__ = ["DatasetSpec", "PAPER_DATASETS", "make_dataset",
+           "make_skewed_dataset", "make_queries"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +52,45 @@ def make_dataset(spec: DatasetSpec) -> np.ndarray:
     x = np.clip(x, 0.0, 1.0) * spec.universe
     even = 2 * np.round(x / 2.0)
     return np.clip(even, 0, spec.universe).astype(np.int32)
+
+
+def make_skewed_dataset(spec: DatasetSpec, zipf_s: float = 1.4,
+                        dup_frac: float = 0.15,
+                        num_hot: int = 4) -> np.ndarray:
+    """Occupancy-skewed variant of ``make_dataset`` (DESIGN.md §9).
+
+    Two production failure modes the uniform generator cannot produce:
+
+    * **Zipfian cluster sizes** — cluster c gets mass ∝ 1/c^zipf_s, so a
+      few clusters hold most of the points (the SIFT/GIST-class occupancy
+      histograms the revisit benchmark reports);
+    * **duplicated points** — a ``dup_frac`` fraction of rows are verbatim
+      copies of ``num_hot`` randomly chosen rows.  Identical rows hash
+      identically in EVERY table, so each hot row is a guaranteed hot
+      bucket at any (L, M, W) — the worst case for a global-max-bucket
+      candidate ladder, and exactly what the two-level compaction policy
+      must absorb.
+
+    Same value domain as ``make_dataset`` (nonnegative even ints <= U), so
+    all downstream tooling (queries, ground truth, hashing) is unchanged.
+    """
+    rng = np.random.default_rng(spec.seed + 0x5EED)
+    centers = rng.uniform(0.25, 0.75, size=(spec.num_clusters, spec.dim))
+    weights = 1.0 / np.arange(1, spec.num_clusters + 1) ** zipf_s
+    weights /= weights.sum()
+    assign = rng.choice(spec.num_clusters, size=spec.n, p=weights)
+    noise = rng.laplace(0.0, spec.cluster_spread, size=(spec.n, spec.dim))
+    x = np.clip(centers[assign] + noise, 0.0, 1.0) * spec.universe
+    data = np.clip(2 * np.round(x / 2.0), 0, spec.universe).astype(np.int32)
+    n_dup = int(spec.n * dup_frac)
+    if n_dup and num_hot:
+        hot = rng.choice(spec.n, size=min(num_hot, spec.n), replace=False)
+        targets = rng.choice(spec.n, size=min(n_dup, spec.n), replace=False)
+        # don't overwrite the hot originals themselves
+        targets = targets[~np.isin(targets, hot)]
+        data[targets] = data[hot[rng.integers(0, hot.size,
+                                              size=targets.size)]]
+    return data
 
 
 def make_queries(

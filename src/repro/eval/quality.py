@@ -373,9 +373,75 @@ class QualityRun:
             "compact_segmented_matches_flat": bool(
                 np.array_equal(np.asarray(sd), fd)
                 and np.array_equal(np.asarray(si), fi)),
-            "compact_cand_buckets": [cb for _, cb in used],
+            "compact_cand_buckets": [cb for _, cb, _ in used],
             "compact_full_slab": (cfg.num_tables * cfg.probes_per_table
                                   * cfg.candidate_cap),
+        }
+
+    def check_skew_cap(self, cfg: IndexConfig, quantile: float = 0.999,
+                       floor: int = 64, flat=None) -> dict:
+        """Skew-aware two-level compaction oracle (DESIGN.md §9).
+
+        Derives the two-level caps the serving policy would (per-bucket
+        ``c_norm`` from the build-time occupancy-histogram quantile,
+        normal-ladder top ``ctot_norm`` from realized capped totals) and
+        checks both overflow policies against the uncapped flat query:
+
+        * ``escalate`` must stay **bit-identical** — the exact worst-case
+          rung is still exact;
+        * ``truncate`` (per-bucket sorted-prefix truncation) must cost
+          < 0.5% recall vs the uncapped result at paper-shaped configs —
+          the bounded-latency knob's advertised price.
+
+        On skew-free data the caps degenerate (``c_norm == full cap``) and
+        both paths are trivially exact; feed it
+        ``data.ann_synthetic.make_skewed_dataset`` output to actually
+        exercise hot buckets.
+        """
+        fd, fi = self.query_flat(cfg) if flat is None else flat
+        fd, fi = np.asarray(fd), np.asarray(fi)
+        state = build_index(cfg, self.key, self.data)
+        lp = cfg.num_tables * cfg.probes_per_table
+        occ_max = pipe.max_bucket_occupancy(state.sorted_keys,
+                                            state.occ_from)
+        c_full = min(cfg.candidate_cap, occ_max)
+        ctot_cap = lp * c_full
+        c_norm = max(1, min(c_full, pipe.occupancy_quantile(
+            state.occ_hist, quantile)))
+        # p90 of realized capped totals over the dataset's own rows — same
+        # derivation as SegmentedIndex._ensure_caps (per-bucket cap tames
+        # depth outliers, p90 tames breadth outliers; the overflow rung
+        # absorbs the tail past both)
+        from repro.core.index import probe_index
+        sample = self.data[:: max(1, self.data.shape[0] // 64)][:64]
+        _, _, occ, _ = probe_index(cfg, state, jnp.asarray(sample,
+                                                          jnp.int32))
+        totals = np.minimum(np.asarray(occ), c_norm).sum(axis=-1)
+        realized = int(np.percentile(totals, 90))
+        ctot_norm = min(lp * c_norm,
+                        1 << max(0, 2 * realized - 1).bit_length())
+        ctot_norm = max(1, min(ctot_norm, ctot_cap))
+        ed, ei = query_index_compact(
+            cfg, state, self.queries, floor=floor, ctot_cap=ctot_cap,
+            ctot_norm=ctot_norm, c_cap=c_norm, overflow="escalate")
+        td, ti = query_index_compact(
+            cfg, state, self.queries, floor=floor, ctot_cap=ctot_cap,
+            ctot_norm=ctot_norm, c_cap=c_norm, overflow="truncate")
+        uncapped = self._score(fd, fi)
+        capped = self._score(np.asarray(td), np.asarray(ti))
+        drop = uncapped["recall"] - capped["recall"]
+        return {
+            "skew_c_norm": c_norm,
+            "skew_c_full": c_full,
+            "skew_ctot_norm": ctot_norm,
+            "skew_ctot_cap": ctot_cap,
+            "skew_escalate_matches_flat": bool(
+                np.array_equal(np.asarray(ed), fd)
+                and np.array_equal(np.asarray(ei), fi)),
+            "skew_uncapped_recall": uncapped["recall"],
+            "skew_capped_recall": capped["recall"],
+            "skew_recall_drop": drop,
+            "skew_recall_within_half_pct": bool(drop < 0.005),
         }
 
     def check_distributed(self, cfg: IndexConfig, flat=None) -> dict:

@@ -42,6 +42,12 @@ Output contract:
              ``sum_{l,p} min(hi - lo, cap)``, NOT clipped to ``cbucket``
              (so callers can detect a binding bucket and re-bucket).
 
+    Per-bucket truncation is a deterministic *sorted-order prefix*: a bucket
+    with occupancy > cap contributes exactly its first ``cap`` rows in
+    sorted-ids order (slots ``lo .. lo+cap``).  DESIGN.md §9's two-level
+    compaction leans on this — a tighter cap is reproducible and
+    oracle-checkable (the python/np oracle applies the same prefix rule).
+
 VMEM budget of the Pallas kernel (bq=8): sorted keys + ids are mapped as one
 (L, n) block each (2*L*n*4 B — segment-sized shards fit easily), the probe
 keys tile is bq*L*P*4 B, and the compact output tile bq*cbucket*4 B.  The
@@ -201,17 +207,21 @@ def fused_probe_pallas(
 
 def probe_extents_xla(sorted_keys: jax.Array, probe_keys: jax.Array,
                       cap: int, occ_from=None):
-    """Clamped bucket extents: the fused front-end's phase-A state.
+    """Raw bucket extents: the fused front-end's phase-A state.
 
-    Returns (lo (Q, L*P) int32, csum (Q, L*P) int32 — the inclusive prefix
-    sum of the clamped per-bucket counts ``min(hi - lo, cap)`` — and
-    counts (Q,) int32 = per-query totals, i.e. ``csum[:, -1]``).  The
-    two-phase serving path carries (lo, csum) across the host-side
-    candidate-bucket pick so the gather phase neither re-searches nor
-    re-scans — C× smaller than the staged slab, the minimal state that can
-    cross the pick.  (The one-pass Pallas kernel keeps even this in VMEM;
-    on TPU the gather phase simply re-searches in-kernel from the probe
-    keys instead of consuming extents.)
+    Returns (lo (Q, L*P) int32, occ (Q, L*P) int32 — the *unclamped*
+    per-bucket occupancies ``hi - lo`` — and counts (Q,) int32 = per-query
+    totals under ``cap``, i.e. ``sum min(occ, cap)``).  The two-phase
+    serving path carries (lo, occ) across the host-side candidate-bucket
+    pick so the gather phase neither re-searches nor re-scans — C× smaller
+    than the staged slab, the minimal state that can cross the pick.
+    Keeping ``occ`` raw (clamping deferred to ``compact_gather_xla``) is
+    what makes two-level compaction free: the gather phase can apply ANY
+    per-bucket cap ``c_cap <= cap`` to the same extents, so the overflow
+    pick (DESIGN.md §9) costs no extra phase-A work.  (The one-pass Pallas
+    kernel keeps even this in VMEM; on TPU the gather phase simply
+    re-searches in-kernel from the probe keys instead of consuming
+    extents.)
 
     ``occ_from`` — the build-time run-length table (``IndexState.occ_from``:
     ``occ_from[t, i]`` = length of the equal-key run starting at ``i``) —
@@ -236,7 +246,7 @@ def probe_extents_xla(sorted_keys: jax.Array, probe_keys: jax.Array,
 
         lo, hi = jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
             sorted_keys, probe_keys)                    # (Q, L, P)
-        cnt = jnp.minimum(hi - lo, cap).reshape(q, l * p).astype(jnp.int32)
+        occ = (hi - lo).reshape(q, l * p).astype(jnp.int32)
         lo = lo.reshape(q, l * p).astype(jnp.int32)
     else:
         # 'scan_unrolled' trades code size for ~25% less per-step overhead
@@ -250,25 +260,32 @@ def probe_extents_xla(sorted_keys: jax.Array, probe_keys: jax.Array,
         table_base = (jnp.arange(l * p, dtype=jnp.int32) // p) * n
         safe = table_base[None, :] + jnp.minimum(lo, n - 1)
         hit = (jnp.take(sorted_keys.reshape(-1), safe) == pk_flat) & (lo < n)
-        occ = jnp.take(occ_from.reshape(-1), safe)
-        cnt = jnp.where(hit, jnp.minimum(occ, cap), 0)
-    csum = jnp.cumsum(cnt, axis=-1)
-    return lo, csum, csum[:, -1]
+        occ = jnp.where(hit, jnp.take(occ_from.reshape(-1), safe),
+                        0).astype(jnp.int32)
+    counts = jnp.minimum(occ, cap).sum(axis=-1).astype(jnp.int32)
+    return lo, occ, counts
 
 
-@functools.partial(jax.jit, static_argnames=("p", "cbucket"))
+@functools.partial(jax.jit, static_argnames=("p", "cbucket", "cap"))
 def compact_gather_xla(sorted_ids: jax.Array, lo: jax.Array,
-                       csum: jax.Array, p: int, cbucket: int):
+                       occ: jax.Array, p: int, cbucket: int, cap: int):
     """Phase B: compacted gather from precomputed extents.
 
-    sorted_ids (L, n); lo/csum (Q, L*P) from ``probe_extents_xla`` (same
-    probe order, table-major).  Returns (ids (Q, cbucket) int32 sentinel n,
-    counts (Q,)).
+    sorted_ids (L, n); lo/occ (Q, L*P) from ``probe_extents_xla`` (same
+    probe order, table-major).  Each bucket contributes its first
+    ``min(occ, cap)`` rows (sorted-order-prefix truncation — deterministic,
+    so a capped gather is oracle-checkable); ``cap`` may be any value, not
+    just the ``cap`` the extents were computed at, which is how the
+    two-level overflow rung applies a tighter per-bucket cap without
+    re-running phase A.  Returns (ids (Q, cbucket) int32 sentinel n,
+    counts (Q,) — totals under THIS cap).
     """
     l, n = sorted_ids.shape
     q, lp = lo.shape
     if n == 0 or cbucket == 0 or q == 0:
         return _empty(q, cbucket)
+    cnt = jnp.minimum(occ, cap).astype(jnp.int32)
+    csum = jnp.cumsum(cnt, axis=-1).astype(jnp.int32)   # inclusive prefix
     total = csum[:, -1]
     start = jnp.pad(csum, ((0, 0), (1, 0)))[:, :lp]     # exclusive prefix
 
@@ -300,5 +317,5 @@ def fused_probe_xla(
     p = probe_keys.shape[2]
     if sorted_keys.shape[1] == 0 or cbucket == 0 or q == 0:
         return _empty(q, cbucket)
-    lo, csum, _ = probe_extents_xla(sorted_keys, probe_keys, cap)
-    return compact_gather_xla(sorted_ids, lo, csum, p, cbucket)
+    lo, occ, _ = probe_extents_xla(sorted_keys, probe_keys, cap)
+    return compact_gather_xla(sorted_ids, lo, occ, p, cbucket, cap)

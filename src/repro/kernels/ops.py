@@ -65,12 +65,14 @@ def fused_rerank(dataset, queries, ids, k, chunk=512, **kw):
 
 
 def probe_extents(sorted_keys, probe_keys, cap, occ_from=None):
-    """Clamped (lo, csum, counts) bucket extents — fused-probe phase A.
+    """Raw (lo, occ, counts) bucket extents — fused-probe phase A.
 
-    Plain XLA on every backend (a searchsorted sweep + gathers + a scan;
-    there is no big gather to fuse).  The (lo, csum) pair is what the
+    Plain XLA on every backend (a searchsorted sweep + gathers + a reduce;
+    there is no big gather to fuse).  The (lo, occ) pair is what the
     two-phase serving path hands back to ``fused_probe(extents=...)`` so
-    the gather phase does not repeat the search on XLA backends.
+    the gather phase does not repeat the search on XLA backends; ``occ``
+    is the *unclamped* occupancy, so the gather may apply any per-bucket
+    cap <= the counts' cap (two-level compaction, DESIGN.md §9).
     ``occ_from`` (the build-time run-length table) drops the right-side
     search — pass it whenever the index carries one.
     """
@@ -87,10 +89,12 @@ def fused_probe(sorted_keys, sorted_ids, probe_keys, cap, cbucket,
     ``REPRO_PROBE_EXECUTOR=pallas|xla`` (parity tests pin pallas-interpret
     against the XLA executor and the ref oracle).
 
-    ``extents`` — a precomputed ``probe_extents`` (lo, csum) pair — lets the
+    ``extents`` — a precomputed ``probe_extents`` (lo, occ) pair — lets the
     XLA executor skip the search (the two-phase serving path computes it in
     phase A anyway); the Pallas kernel ignores it and re-searches in VMEM,
-    which is cheaper than carrying extents through HBM on TPU.
+    which is cheaper than carrying extents through HBM on TPU.  Because
+    ``occ`` is raw, ``cap`` here may differ from the cap the extents were
+    computed at — the overflow rung passes a tighter one.
     """
     executor = os.environ.get("REPRO_PROBE_EXECUTOR")
     if executor is None:
@@ -101,5 +105,5 @@ def fused_probe(sorted_keys, sorted_ids, probe_keys, cap, cbucket,
                                   **kw)
     if extents is not None:
         return compact_gather_xla(sorted_ids, extents[0], extents[1],
-                                  probe_keys.shape[2], cbucket)
+                                  probe_keys.shape[2], cbucket, cap)
     return fused_probe_xla(sorted_keys, sorted_ids, probe_keys, cap, cbucket)

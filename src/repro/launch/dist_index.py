@@ -54,6 +54,7 @@ def state_specs(mesh: Mesh, cfg: IndexConfig) -> IndexState:
         template=P(),
         row_offset=P(rows),
         occ_from=P(None, rows),
+        occ_hist=P(),  # psum over row shards at build -> replicated
     )
 
 
@@ -72,30 +73,37 @@ def dist_build_fn(cfg: IndexConfig, mesh: Mesh):
         n_local = dataset.shape[0]
         state = build_index(cfg, jax.random.PRNGKey(0), dataset,
                             row_offset=idx * n_local, params=params)
+        # shard-local occupancy histograms are additive (each shard counts
+        # its own buckets) — one psum yields the replicated global view the
+        # two-level compaction policy reads (DESIGN.md §9)
+        occ_hist = jax.lax.psum(state.occ_hist, rows)
         # row_offset out as (1,) so it shards over `rows`
         return (state.sorted_keys, state.sorted_ids,
-                state.row_offset[None], state.occ_from)
+                state.row_offset[None], state.occ_from, occ_hist)
 
     fn = shard_map(
         local_build, mesh=mesh,
         in_specs=(P(rows, None), P()),
-        out_specs=(P(None, rows), P(None, rows), P(rows), P(None, rows)),
+        out_specs=(P(None, rows), P(None, rows), P(rows), P(None, rows),
+                   P()),
         check_rep=False,
     )
 
     def build(dataset, params):
-        sorted_keys, sorted_ids, row_offset, occ_from = fn(dataset, params)
+        (sorted_keys, sorted_ids, row_offset, occ_from,
+         occ_hist) = fn(dataset, params)
         template = jnp.asarray(make_template(cfg))
         return IndexState(params=params, sorted_keys=sorted_keys,
                           sorted_ids=sorted_ids, dataset=dataset,
                           template=template, row_offset=row_offset,
-                          occ_from=occ_from)
+                          occ_from=occ_from, occ_hist=occ_hist)
 
     return build
 
 
 def dist_query_fn(cfg: IndexConfig, mesh: Mesh, merge: str = "allgather",
-                  cand_bucket: int | None = None):
+                  cand_bucket: int | None = None,
+                  cand_cap: int | None = None):
     """Returns query(state, queries) -> (dists (Q, k), ids (Q, k)).
 
     queries: (Q_global, m) sharded over 'model'.  merge: 'allgather' | 'ring'.
@@ -105,7 +113,12 @@ def dist_query_fn(cfg: IndexConfig, mesh: Mesh, merge: str = "allgather",
     shard occupancy (e.g. ``pipe.oracle_candidate_cap``-derived) passes the
     bound here and every shard gathers/reranks at it instead of the
     worst-case ``L*P*C``.  Results are bit-identical as long as the bucket
-    covers the per-shard candidate counts.
+    covers the per-shard candidate counts.  ``cand_cap`` additionally
+    tightens the per-bucket clamp below ``cfg.candidate_cap`` (the
+    two-level truncate rung, DESIGN.md §9) — derive it from the sharded
+    state's ``occ_hist`` via ``pipe.occupancy_quantile`` for a
+    skew-bounded slab; deterministic sorted-prefix truncation, so results
+    stay reproducible (but no longer exact when a bucket exceeds it).
     """
     rows = _row_axes(mesh)
     nshards = int(np.prod([mesh.shape[a] for a in rows]))
@@ -122,7 +135,7 @@ def dist_query_fn(cfg: IndexConfig, mesh: Mesh, merge: str = "allgather",
         n = dataset.shape[0]
         ids = pipe.probe_candidates(
             cfg, params, template, sorted_keys, sorted_ids, n, queries,
-            cbucket=cand_bucket)
+            cbucket=cand_bucket, c_cap=cand_cap)
         d, i = pipe.stage_rerank(cfg, dataset, queries, ids)   # local top-k
         i = jnp.where(i >= 0, i + row_offset[0], -1)           # global ids
         d = jnp.where(i < 0, big, d)

@@ -207,7 +207,8 @@ def lower_ann_cell(multi_pod: bool = False, n_global: int = 1 << 27,
         template=jax.ShapeDtypeStruct(
             (cfg.probes_per_table, 2 * cfg.num_hashes), jnp.int8),
         row_offset=jax.ShapeDtypeStruct((nshards,), jnp.int32),
-        occ_from=jax.ShapeDtypeStruct((cfg.num_tables, n_global), jnp.int32))
+        occ_from=jax.ShapeDtypeStruct((cfg.num_tables, n_global), jnp.int32),
+        occ_hist=jax.ShapeDtypeStruct((cfg.num_tables, 32), jnp.int32))
     queries = jax.ShapeDtypeStruct((q_global, dim), jnp.int32)
 
     sspec = di.state_specs(mesh, cfg)

@@ -111,6 +111,17 @@ class ServeConfig:
                                    # buckets (DESIGN.md §8); False = the
                                    # worst-case L*P*C slab every batch
     cand_bucket_min: int = 128     # smallest candidate-count bucket
+    cand_cap_quantile: float = 0.999  # occupancy-histogram quantile for the
+                                   # two-level per-bucket cap (DESIGN.md §9);
+                                   # >= 1.0 disables the second level
+    cand_overflow: str = "escalate"  # hot-bucket overflow rung policy:
+                                   # 'escalate' = exact worst-case rung
+                                   # (bit-identical), 'truncate' = bounded
+                                   # slab with per-bucket prefix truncation
+                                   # (<0.5% recall cost at paper configs)
+    cand_cap_sample: int = 32      # surrogate queries sampled per segment to
+                                   # size the normal ladder top from realized
+                                   # candidate totals
     persistent_cache: bool = True  # JAX persistent compilation cache: warm
                                    # restarts read executables off disk
     cache_dir: Optional[str] = None  # None -> $REPRO_COMPILE_CACHE_DIR or
@@ -164,6 +175,11 @@ class AnnServingEngine:
         self.cfg = cfg
         if index is not None:
             self.index = index
+            # serving policy belongs to the engine: adopted indexes serve
+            # under this engine's two-level cap knobs (segments without
+            # derived caps pick them up lazily under these values)
+            index.cap_quantile = serve_cfg.cand_cap_quantile
+            index.cap_sample = serve_cfg.cand_cap_sample
         elif self.autotune is not None and self.autotune.state is not None:
             # The tuner already built and validated exactly this index
             # (same cfg/key/dataset); seed the segment from it instead of
@@ -172,14 +188,19 @@ class AnnServingEngine:
             self.index = SegmentedIndex.from_checkpoint(
                 cfg, self.autotune.state,
                 jnp.arange(n, dtype=jnp.int32), n,
-                delta_cap=serve_cfg.delta_cap)
+                delta_cap=serve_cfg.delta_cap,
+                cap_quantile=serve_cfg.cand_cap_quantile,
+                cap_sample=serve_cfg.cand_cap_sample)
         else:
             self.index = SegmentedIndex.from_dataset(
-                cfg, key, dataset, delta_cap=serve_cfg.delta_cap)
+                cfg, key, dataset, delta_cap=serve_cfg.delta_cap,
+                cap_quantile=serve_cfg.cand_cap_quantile,
+                cap_sample=serve_cfg.cand_cap_sample)
         self._dim = self.index.dim
         self._pending: List[np.ndarray] = []
         self.stats = {"batches": 0, "queries": 0, "hedges": 0,
                       "inserts": 0, "deletes": 0, "bucket_cold_hits": 0,
+                      "overflow_hits": 0, "truncated_candidates": 0,
                       "compact_ms": 0.0, "warmup_ms": 0.0, "total_ms": 0.0,
                       "batch_ms": [],
                       "cand_buckets": collections.Counter()}
@@ -240,7 +261,8 @@ class AnnServingEngine:
             warm = jnp.zeros((b, self._dim), jnp.int32)
             if self.serve_cfg.compact_probe:
                 for key in self.index.warm_compact(
-                        warm, floor=self.serve_cfg.cand_bucket_min):
+                        warm, floor=self.serve_cfg.cand_bucket_min,
+                        overflow=self.serve_cfg.cand_overflow):
                     self._warm.add((b, sig) + key)
             else:
                 self.index.query(warm)[0].block_until_ready()
@@ -374,7 +396,8 @@ class AnnServingEngine:
         t0 = time.perf_counter()
         if self.serve_cfg.compact_probe:
             d, i, used = self.index.query_compact(
-                jnp.asarray(batch), floor=self.serve_cfg.cand_bucket_min)
+                jnp.asarray(batch), floor=self.serve_cfg.cand_bucket_min,
+                overflow=self.serve_cfg.cand_overflow, stats=self.stats)
             for seg_key in used:
                 self.stats["cand_buckets"][seg_key[1]] += 1
                 ck = (batch.shape[0], sig) + seg_key
@@ -491,6 +514,19 @@ class AnnServingEngine:
             "buckets": self.buckets(),
             "bucket_cold_hits": self.stats["bucket_cold_hits"],
             "cand_buckets": dict(sorted(self.stats["cand_buckets"].items())),
+            # two-level compaction skew telemetry (DESIGN.md §9): how often
+            # a batch hit the overflow rung, how many candidates the
+            # truncate policy dropped, and each segment's occupancy shape —
+            # a skew regression shows up here before it costs latency.
+            "skew": {
+                "cand_overflow": self.serve_cfg.cand_overflow,
+                "cand_cap_quantile": self.serve_cfg.cand_cap_quantile,
+                "overflow_hits": self.stats["overflow_hits"],
+                "overflow_rate": (self.stats["overflow_hits"]
+                                  / max(1, self.stats["batches"])),
+                "truncated_candidates": self.stats["truncated_candidates"],
+                "segments": self.index.skew_summary(),
+            },
             "compile_cache": compilation_cache_stats(),
             "warmup_ms": self.stats["warmup_ms"],
             "mean_batch_ms": float(lat.mean()),

@@ -134,6 +134,22 @@ def test_segmented_oracle_exact_match_after_compaction(run):
     assert out["mutated_no_regression"]
 
 
+def test_skew_cap_oracle():
+    """ISSUE 6 acceptance (eval side): on duplicated-point data the
+    escalate overflow rung stays bit-identical to the flat query while
+    the truncate rung costs < 0.5% recall."""
+    data = ds.make_skewed_dataset(SPEC, zipf_s=0.5, dup_frac=0.25,
+                                  num_hot=2)
+    queries = ds.make_queries(SPEC, data, 16)
+    srun = QualityRun(data, queries, SPEC.universe, QSPEC)
+    cfg = srun.scheme_config("mp-rw-lsh", 2, 30)
+    out = srun.check_skew_cap(cfg)
+    assert out["skew_escalate_matches_flat"]
+    assert out["skew_recall_within_half_pct"]
+    assert out["skew_c_norm"] <= out["skew_c_full"]
+    assert out["skew_ctot_norm"] <= out["skew_ctot_cap"]
+
+
 def test_distributed_oracle_bit_identical(run):
     cfg = run.scheme_config("mp-rw-lsh", 2, 30)
     out = run.check_distributed(cfg)

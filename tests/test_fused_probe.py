@@ -150,6 +150,58 @@ def test_truncating_bucket_is_prefix():
         _assert_all_equal(keys, ids, pk, cap, cb)
 
 
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_two_level_cap_matches_oracle_prefix(data):
+    """Phase-A extents computed at the full cap, gathered at a tighter
+    ``c_cap``, must equal the oracle run directly at ``c_cap`` — the
+    sorted-order-prefix truncation composes across caps, which is what
+    lets the overflow rung reuse phase A (§9).  Includes the
+    all-points-in-one-bucket worst case."""
+    l = data.draw(st.integers(1, 4), label="L")
+    n = data.draw(st.integers(1, 150), label="n")
+    p = data.draw(st.integers(1, 8), label="P")
+    cap = data.draw(st.integers(2, 16), label="cap")
+    c_cap = min(data.draw(st.integers(1, 16), label="c_cap"), cap)
+    q = data.draw(st.integers(1, 6), label="Q")
+    cbucket = data.draw(st.sampled_from([1, 16, 128]), label="cbucket")
+    one_bucket = data.draw(st.booleans(), label="one_bucket")
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    rng = np.random.default_rng(seed)
+    if one_bucket:
+        keys = np.zeros((l, n), np.uint32)
+        pk = np.zeros((q, l, p), np.uint32)
+    else:
+        universe = max(1, n // 2)
+        keys = np.sort(rng.integers(0, universe + 1, (l, n))
+                       .astype(np.uint32), axis=-1)
+        pk = rng.integers(0, universe + 3, (q, l, p)).astype(np.uint32)
+    ids = np.stack([rng.permutation(n) for _ in range(l)]).astype(np.int32)
+    keys_j, ids_j, pk_j = map(jnp.asarray, (keys, ids, pk))
+    lo, occ, _ = kops.probe_extents(keys_j, pk_j, cap)
+    got_ids, got_cnt = kops.fused_probe(keys_j, ids_j, pk_j, c_cap, cbucket,
+                                        extents=(lo, occ))
+    want_ids, want_cnt = np_fused_probe(keys, ids, pk, c_cap, cbucket)
+    np.testing.assert_array_equal(np.asarray(got_ids), want_ids)
+    np.testing.assert_array_equal(np.asarray(got_cnt), want_cnt)
+
+
+def test_occ_histogram_and_quantile():
+    """The build-time histogram counts each distinct bucket once in its
+    ceil-log2 occupancy bin; ``occupancy_quantile`` reads pow-2 caps off
+    it (bucket-weighted, so hot buckets can't move low quantiles)."""
+    from repro.core.index import OCC_HIST_BINS, _occ_histogram, _run_lengths
+    keys = jnp.asarray(np.asarray([[1, 1, 1, 2, 3, 3, 3, 3]], np.uint32))
+    hist = np.asarray(_occ_histogram(keys, _run_lengths(keys)))
+    assert hist.shape == (1, OCC_HIST_BINS)
+    assert hist.sum() == 3                  # three distinct buckets
+    assert hist[0, 0] == 1                  # occ 1 -> bin 0
+    assert hist[0, 2] == 2                  # occ 3, 4 -> bin 2 ((2, 4])
+    assert pipe.occupancy_quantile(hist, 1.0) == 4
+    assert pipe.occupancy_quantile(hist, 0.01) == 1
+    assert pipe.occupancy_quantile(np.zeros((2, 32), np.int32), 0.999) == 1
+
+
 def test_extents_occ_from_parity(cfg, small):
     """The build-time run-length shortcut (IndexState.occ_from) must
     produce bit-identical extents to the two-sided-search fallback —
@@ -251,11 +303,11 @@ def test_segmented_query_compact_bit_identical(cfg, small):
     np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
     np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
     full = cfg.num_tables * cfg.probes_per_table * cfg.candidate_cap
-    assert used and all(cb <= full for _, cb in used)
+    assert used and all(cb <= full for _, cb, _ in used)
     ladders = idx.candidate_ladders()
     assert len(ladders) == idx.num_segments
-    for (size, cb), ladder in zip(used, ladders):
-        assert cb in ladder
+    for (size, cb, cc), ladder in zip(used, ladders):
+        assert (cb, cc) in ladder
 
 
 def test_max_bucket_occupancy():
@@ -274,6 +326,97 @@ def test_candidate_ladder_and_bucket():
     assert pipe.candidate_bucket(0, 1000, 64) == 64
     assert pipe.candidate_bucket(129, 1000, 64) == 256
     assert pipe.candidate_bucket(900, 1000, 64) == 1000
+
+
+def test_candidate_ladder_and_bucket_edges():
+    """Degenerate ladders the batch-rung pick must survive: a cap below
+    the floor, a cap of one, and counts landing exactly on a pow-2."""
+    assert pipe.candidate_ladder(1, floor=64) == (1,)
+    assert pipe.candidate_ladder(256, floor=64) == (64, 128, 256)
+    assert pipe.candidate_bucket(0, 1, 64) == 1
+    assert pipe.candidate_bucket(500, 1, 64) == 1       # count >> cap
+    assert pipe.candidate_bucket(7, 40, 64) == 40       # floor >= cap
+    assert pipe.candidate_bucket(64, 1000, 64) == 64    # exact pow-2
+    assert pipe.candidate_bucket(128, 1000, 64) == 128
+    assert pipe.candidate_bucket(1000, 1000, 64) == 1000
+
+
+def test_rung_ladder_and_pick_rung():
+    """Two-level ladder (§9): without a normal top it degenerates to the
+    single-level ladder; with one, exactly one overflow rung is appended
+    and every ``pick_rung`` result is a ladder member."""
+    single = tuple((b, None) for b in pipe.candidate_ladder(1000, 64))
+    assert pipe.rung_ladder(1000, floor=64) == single
+    assert pipe.rung_ladder(1000, 64, ctot_norm=2048, c_cap=8) == single
+    esc = pipe.rung_ladder(4096, 64, ctot_norm=512, c_cap=8,
+                           overflow="escalate")
+    assert esc == ((64, None), (128, None), (256, None), (512, None),
+                   (4096, None))
+    tr = pipe.rung_ladder(4096, 64, ctot_norm=512, c_cap=8,
+                          overflow="truncate")
+    assert tr == ((64, None), (128, None), (256, None), (512, None),
+                  (512, 8))
+    with pytest.raises(ValueError):
+        pipe.rung_ladder(4096, 64, ctot_norm=512, c_cap=8, overflow="bogus")
+    for count in (0, 63, 64, 500, 512, 513, 4000, 9999):
+        for ovf, ladder in (("escalate", esc), ("truncate", tr)):
+            cb, cc, over = pipe.pick_rung(count, 4096, 64, 512, 8, ovf)
+            assert (cb, cc) in ladder
+            assert over == (count > 512)
+            assert cb >= min(count, 4096) or cc is not None
+
+
+def test_segmented_truncate_overflow_stats(cfg, small):
+    """Forcing every batch past the normal ladder: the truncate rung stays
+    at ``ctot_norm`` width with the per-bucket ``c_norm`` applied, and the
+    stats dict records the overflow hit + truncated-candidate count."""
+    data, queries = small
+    idx = SegmentedIndex.from_dataset(cfg, KEY, data)
+    for seg in idx.segments:
+        idx._ensure_caps(seg)
+        seg.ctot_norm, seg.c_norm = 64, 1
+    stats = {"overflow_hits": 0, "truncated_candidates": 0}
+    d, i, used = idx.query_compact(queries, overflow="truncate",
+                                   stats=stats)
+    assert d.shape == i.shape == (queries.shape[0], cfg.k)
+    assert stats["overflow_hits"] == len(used)
+    assert stats["truncated_candidates"] > 0
+    assert all(cb == 64 and cc == 1 for _, cb, cc in used)
+    # escalate on the same forced caps falls back to the exact rung
+    d0, i0 = idx.query(queries)
+    d1, i1, used_e = idx.query_compact(queries, overflow="escalate")
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    assert all(cc is None for _, _, cc in used_e)
+
+
+def test_skewed_dataset_caps_below_full():
+    """On duplicated-point data the histogram quantile must land far
+    below the hot-bucket occupancy, and the derived ladder must carry the
+    overflow rung (the whole point of two-level capping).  At test scale
+    the hot buckets are a larger share of distinct buckets than in
+    production, so the quantile is p99 rather than the serving-default
+    p99.9."""
+    spec = ds.DatasetSpec("skewtest", n=2000, dim=16, universe=256,
+                          num_clusters=12)
+    cfg = IndexConfig(num_tables=4, num_hashes=8, width=16, num_probes=30,
+                      candidate_cap=256, universe=256, k=8,
+                      rerank_chunk=128)
+    data = jnp.asarray(ds.make_skewed_dataset(spec, zipf_s=0.5,
+                                              dup_frac=0.3, num_hot=2))
+    idx = SegmentedIndex.from_dataset(cfg, KEY, data, cap_quantile=0.99)
+    seg = idx.segments[0]
+    idx._ensure_caps(seg)
+    occ_max = pipe.max_bucket_occupancy(seg.state.sorted_keys,
+                                        seg.state.occ_from)
+    assert occ_max >= 200                     # the dups really are hot
+    assert seg.c_norm < occ_max
+    assert seg.ctot_norm < seg.ctot_cap
+    ladder = idx.candidate_ladders(overflow="truncate")[0]
+    assert ladder[-1] == (seg.ctot_norm, seg.c_norm)
+    summ = idx.skew_summary()[0]
+    assert summ["occ_quantiles"]["max"] == occ_max
+    assert summ["occ_quantiles"]["p50"] <= summ["occ_quantiles"]["p999"]
 
 
 # ---------------------------------------------------------------------------
@@ -302,3 +445,11 @@ def test_engine_compact_probe_smoke(cfg, small):
     assert eng_c.stats["bucket_cold_hits"] == cold_after_warm
     s = eng_c.summary()
     assert s["cand_buckets"] and "compile_cache" in s
+    # skew observability (§9): policy knobs + per-segment occupancy view
+    sk = s["skew"]
+    assert sk["cand_overflow"] == "escalate"
+    assert sk["cand_cap_quantile"] == 0.999
+    assert sk["overflow_hits"] == eng_c.stats["overflow_hits"]
+    assert sk["truncated_candidates"] == 0     # escalate never truncates
+    assert len(sk["segments"]) == eng_c.index.num_segments
+    assert all("occ_quantiles" in e for e in sk["segments"] if e["size"])
