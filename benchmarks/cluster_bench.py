@@ -16,12 +16,20 @@ through the scenarios the subsystem exists for, and emits machine-readable
      the hedge deadline and the fast peer's answer wins
      (``hedged_reissues``/``hedge_wins``);
   5. caching + admission: repeat traffic hits the mutation-signature cache;
-     a bounded queue and expired deadlines shed with explicit stats.
+     a bounded queue and expired deadlines shed with explicit stats;
+  6. multi-process serving (ISSUE 7 / DESIGN.md §10): the same router over
+     worker *subprocesses* behind the RPC transport — flat bit-identity
+     across the wire, an honest in-process vs multi-process q/s comparison
+     (the ≥4x gate is asserted only where it is physically meaningful:
+     ``cores >= 4 and workers >= 4``; the measured speedup and core count
+     are always recorded), and a worker-SIGKILL chaos drill (failover +
+     WAL replay + peer catch-up, zero dropped batches).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import shutil
 import tempfile
 import time
@@ -36,7 +44,128 @@ from repro.data import ann_synthetic as ds
 from repro.serve.engine import AnnServingEngine, ServeConfig
 
 
-def main(smoke: bool = False, json_out: str = "BENCH_cluster.json"):
+def _throughput_qps(router, rows: np.ndarray, batch: int) -> float:
+    """q/s over a pre-generated row block, submitted in one go so
+    ``pipeline_depth`` can overlap batches (cache must be disabled)."""
+    t0 = time.perf_counter()
+    router.submit(rows)
+    d, i = router.drain()
+    dt = time.perf_counter() - t0
+    assert d.shape[0] == rows.shape[0], (d.shape, rows.shape)
+    # far-from-data random rows may legitimately fill < k neighbors (-1
+    # padding), so "nothing dropped" is pinned via the router's explicit
+    # failure stats, not per-row sentinels
+    s = router.summary()
+    assert s["dispatch_failures"] == 0, s
+    assert s["rejected_queue_full"] == 0 and s["rejected_deadline"] == 0, s
+    return rows.shape[0] / dt
+
+
+def _multiprocess_section(cfg, serve_cfg, data, queries, fd, fi, workers: int,
+                          batch: int, smoke: bool, root: str) -> dict:
+    """Section 6: processes vs in-process, identity, and the SIGKILL drill."""
+    cores = len(os.sched_getaffinity(0))
+    rng = np.random.default_rng(11)
+    n_rows = batch * (6 if smoke else 16)
+    rows = (rng.integers(0, 32, (n_rows, data.shape[1])) * 2).astype(np.int32)
+    key = jax.random.PRNGKey(0)
+    depth = 4
+
+    def build(transport, n_shards, n_reps, tag, cache=0):
+        return ClusterRouter(
+            cfg, serve_cfg,
+            ClusterConfig(num_shards=n_shards, num_replicas=n_reps,
+                          hedge_ms=60000.0, wal_fsync=False,
+                          cache_capacity=cache, transport=transport,
+                          pipeline_depth=depth,
+                          max_queue_depth=max(4096, n_rows)),
+            data, root + tag, key=key)
+
+    # in-process baseline at the SAME topology + pipeline depth: the only
+    # variable in the comparison is the process boundary
+    inproc = build("inproc", workers, 1, "-mp-in")
+    inproc.query(queries[:batch])                   # warm compile paths
+    inproc_qps = _throughput_qps(inproc, rows, batch)
+    inproc.close()
+
+    t0 = time.perf_counter()
+    proc = build("process", workers, 1, "-mp-proc")
+    boot_ms = (time.perf_counter() - t0) * 1e3
+    pd_, pi = proc.query(queries)
+    mp_flat_identity = bool(np.array_equal(pd_, fd)
+                            and np.array_equal(pi, fi))
+    proc.clear_cache()
+    proc_qps = _throughput_qps(proc, rows, batch)
+    proc.close()
+    speedup = proc_qps / max(inproc_qps, 1e-9)
+    # the >=4x acceptance gate only means something where 4x parallelism
+    # physically exists; elsewhere the honest numbers are still recorded
+    gate_eligible = bool(cores >= 4 and workers >= 4)
+    speedup_ok = bool((not gate_eligible) or speedup >= 4.0)
+
+    # SIGKILL chaos drill: S=2 x R=2 worker grid, a worker is SIGKILL'd
+    # UNANNOUNCED mid-stream (no router-side markdown first) -> failover;
+    # mutations while it is down -> peer acks; recover -> respawn + WAL
+    # replay + peer catch-up; peer killed -> the RECOVERED worker serves,
+    # matching a single-engine mirror of the same mutation history.
+    half = data[: data.shape[0] // 2]
+    drill = ClusterRouter(
+        cfg, serve_cfg,
+        ClusterConfig(num_shards=2, num_replicas=2, hedge_ms=60000.0,
+                      wal_fsync=False, cache_capacity=0,
+                      transport="process"),
+        half, root + "-mp-drill", key=key)
+    mirror = AnnServingEngine(cfg, serve_cfg, dataset=jnp.asarray(half),
+                              key=key)
+    pts = (queries[: queries.shape[0] // 2] + 4).astype(np.int32)
+    g_d, g_m = drill.insert(pts), mirror.insert(pts)
+    assert np.array_equal(g_d, g_m)
+    submitted = answered = 0
+    drill_waves = 3
+    for wave in range(drill_waves):
+        if wave == 1:
+            drill.replicas[0][0].handle.sigkill()   # the real thing
+        q = (queries + wave).astype(np.int32)
+        d, i = drill.query(q)
+        submitted += q.shape[0]
+        answered += int((i >= 0).all(axis=1).sum())
+    mp_zero_dropped = bool(answered == submitted)
+    drill.replicas[0][0].alive = False              # router-side markdown
+    drill.delete(g_d[::3])                          # mutations while down
+    mirror.delete(g_m[::3])
+    recov = drill.recover_replica(0, 0)             # respawn + replay
+    drill.kill_replica(0, 1)                        # peer dies: recovered serves
+    rd, ri = drill.query(queries)
+    md, mi = mirror.query_batch(queries)
+    mp_recovery_consistent = bool(np.array_equal(rd, md)
+                                  and np.array_equal(ri, mi))
+    dstats = drill.summary()
+    drill.close()
+    for tag in ("-mp-in", "-mp-proc", "-mp-drill"):
+        shutil.rmtree(root + tag, ignore_errors=True)
+    return {
+        "workers": workers,
+        "cores": cores,
+        "pipeline_depth": depth,
+        "boot_ms": round(boot_ms, 1),
+        "inproc_qps": round(inproc_qps, 1),
+        "process_qps": round(proc_qps, 1),
+        "speedup": round(speedup, 2),
+        "speedup_gate_eligible": gate_eligible,
+        "drill": {"submitted": submitted, "answered": answered,
+                  "failovers": dstats["failovers"],
+                  "marked_dead": dstats["replicas_marked_dead"],
+                  "replayed": recov["replayed"],
+                  "caught_up": recov["caught_up"]},
+        "flags": {"multiprocess_flat_identity": mp_flat_identity,
+                  "multiprocess_zero_dropped": mp_zero_dropped,
+                  "multiprocess_recovery_consistent": mp_recovery_consistent,
+                  "multiprocess_speedup_ok": speedup_ok},
+    }
+
+
+def main(smoke: bool = False, json_out: str = "BENCH_cluster.json",
+         workers: int = None):
     t_start = time.time()
     if smoke:
         spec = ds.DatasetSpec("clu", n=2000, dim=16, universe=64,
@@ -139,6 +268,11 @@ def main(smoke: bool = False, json_out: str = "BENCH_cluster.json"):
     router.drain()
     shed = router.summary()["rejected_deadline"]
 
+    # -- 6. multi-process serving over the RPC transport ------------------
+    workers = workers if workers is not None else (2 if smoke else 4)
+    mp = _multiprocess_section(cfg, serve_cfg, data, queries, fd, fi,
+                               workers, batch, smoke, root)
+
     summary = router.summary()
     acceptance = {
         "cluster_matches_flat": flat_identical,
@@ -148,6 +282,7 @@ def main(smoke: bool = False, json_out: str = "BENCH_cluster.json"):
                                          and hedge_wins >= 1),
         "cache_effective": cache_effective,
         "deadline_shedding_works": bool(shed >= 8),
+        **mp["flags"],
     }
     acceptance["ok"] = all(acceptance.values())
     result = {
@@ -175,6 +310,7 @@ def main(smoke: bool = False, json_out: str = "BENCH_cluster.json"):
         "admission": {"rejected_deadline": shed,
                       "rejected_queue_full":
                           summary["rejected_queue_full"]},
+        "multiprocess": mp,
         "acceptance": acceptance,
         "wall_s": round(time.time() - t_start, 1),
     }
@@ -186,7 +322,12 @@ def main(smoke: bool = False, json_out: str = "BENCH_cluster.json"):
         json.dump(result, f, indent=1)
     print(f"cluster S={shards} R={replicas}: flat_identical={flat_identical} "
           f"zero_dropped={zero_dropped} recovery={recovery_consistent} "
-          f"hedge_wins={hedge_wins} qps={result['steady_qps']} -> {json_out}")
+          f"hedge_wins={hedge_wins} qps={result['steady_qps']} | "
+          f"multiprocess W={mp['workers']} cores={mp['cores']} "
+          f"{mp['inproc_qps']}->{mp['process_qps']} q/s "
+          f"(x{mp['speedup']}, gate "
+          f"{'on' if mp['speedup_gate_eligible'] else 'off'}) "
+          f"-> {json_out}")
     if not acceptance["ok"]:
         raise SystemExit(f"cluster acceptance failed: {acceptance}")
     return result
@@ -196,4 +337,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--json-out", default="BENCH_cluster.json")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="multiprocess section worker count "
+                         "(default: 2 smoke / 4 full)")
     main(**vars(ap.parse_args()))

@@ -2,9 +2,19 @@
 
 ``PYTHONPATH=src python -m benchmarks.run``
 prints ``name,us_per_call,derived`` CSV rows (detail lines prefixed '#').
+
+``PYTHONPATH=src python -m benchmarks.run --summarize`` distills every
+``BENCH_*.json`` in the working directory into one machine-readable
+``BENCH_summary.json`` — the headline number per bench (e2e speedup, p50,
+q/s, recall/identity flags) so the perf trajectory across PRs is a
+one-file diff instead of an archaeology dig.
 """
 from __future__ import annotations
 
+import argparse
+import glob
+import json
+import os
 import sys
 import traceback
 
@@ -23,7 +33,88 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def _get(d: dict, *path, default=None):
+    for p in path:
+        if not isinstance(d, dict) or p not in d:
+            return default
+        d = d[p]
+    return d
+
+
+def _headline(name: str, d: dict) -> dict:
+    """The few numbers/flags per bench that define the perf trajectory."""
+    if name == "pipeline":
+        return {"e2e_speedup": d.get("e2e_speedup"),
+                "frontend_speedup": d.get("frontend_speedup"),
+                "rerank_speedup": d.get("rerank_speedup_from_compaction"),
+                "bit_identical": d.get("outputs_bit_identical")}
+    if name == "rerank":
+        return {"fused_speedup_vs_scan": d.get("fused_speedup_vs_scan"),
+                "bit_identical": d.get("outputs_bit_identical")}
+    if name == "serving":
+        return {"qps": _get(d, "bucketed", "queries_per_s"),
+                "p50_batch_ms": _get(d, "bucketed", "p50_batch_ms"),
+                "p99_batch_ms": _get(d, "bucketed", "p99_batch_ms"),
+                "warm_startup_speedup": _get(d, "warm_start",
+                                             "startup_speedup"),
+                "zero_recompiles": d.get("zero_recompiles_after_warmup")}
+    if name == "cluster":
+        return {"qps": d.get("steady_qps"),
+                "multiprocess_qps": _get(d, "multiprocess", "process_qps"),
+                "multiprocess_speedup": _get(d, "multiprocess", "speedup"),
+                "multiprocess_workers": _get(d, "multiprocess", "workers"),
+                "cores": _get(d, "multiprocess", "cores"),
+                "acceptance_ok": _get(d, "acceptance", "ok")}
+    if name == "quality":
+        return {"tables_needed": _get(d, "table_claim", "tables_needed"),
+                "fresh_recall": _get(d, "consistency", "fresh_recall"),
+                "cluster_matches_flat": _get(d, "consistency",
+                                             "cluster_matches_flat"),
+                "acceptance_ok": _get(d, "acceptance", "ok")}
+    # unknown bench: carry its acceptance/identity flags, drop the bulk
+    out = {}
+    for key in ("acceptance", "outputs_bit_identical", "ok"):
+        if key in d:
+            out[key] = (d[key].get("ok")
+                        if isinstance(d[key], dict) else d[key])
+    return out
+
+
+def summarize(json_dir: str = ".",
+              json_out: str = "BENCH_summary.json") -> dict:
+    """Collapse every BENCH_*.json into one trajectory file."""
+    benches = {}
+    for path in sorted(glob.glob(os.path.join(json_dir, "BENCH_*.json"))):
+        base = os.path.basename(path)
+        if base == os.path.basename(json_out):
+            continue
+        name = base[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except (OSError, json.JSONDecodeError) as err:
+            benches[name] = {"error": str(err)}
+            continue
+        entry = {"smoke": d.get("smoke"), "backend": d.get("backend"),
+                 **_headline(name, d)}
+        benches[name] = {k: v for k, v in entry.items() if v is not None}
+    summary = {"benches": benches}
+    with open(json_out, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"summarized {len(benches)} benches -> {json_out}")
+    return summary
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--summarize", action="store_true",
+                    help="only distill existing BENCH_*.json files into "
+                         "BENCH_summary.json (runs no benchmarks)")
+    ap.add_argument("--json-dir", default=".")
+    args = ap.parse_args(argv)
+    if args.summarize:
+        summarize(args.json_dir)
+        return
     failed = []
     for name, mod in MODULES:
         print(f"# ==== {name} ====", flush=True)
@@ -35,6 +126,7 @@ def main() -> None:
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)
+    summarize(args.json_dir)
 
 
 if __name__ == "__main__":

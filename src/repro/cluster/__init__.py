@@ -1,5 +1,8 @@
 """Cluster serving runtime: sharded router, replica hedging, WAL-durable
-mutations (DESIGN.md §7)."""
+mutations (DESIGN.md §7); multi-process shard workers over the RPC
+transport (DESIGN.md §10)."""
 from .replica import ReplicaDiverged, ReplicaKilled, ShardReplica  # noqa: F401
+from .remote import RemoteReplica, WorkerHandle  # noqa: F401
 from .router import ClusterConfig, ClusterRouter, ClusterUnavailable  # noqa: F401
+from .transport import Connection, RemoteError  # noqa: F401
 from .wal import OP_DELETE, OP_INSERT, WalRecord, WriteAheadLog  # noqa: F401

@@ -24,7 +24,17 @@ on every replayed insert against the gids recorded at append time.
 A replica that was down while its peers kept acknowledging mutations has a
 WAL gap; :meth:`catch_up_from` closes it from a live peer — record-level
 when the peer still has the records, full state transfer when the peer
-already truncated them into a snapshot.
+already truncated them into a snapshot.  The catch-up primitives
+(``wal_records`` / ``apply_records`` / ``adopt_payload`` /
+``export_payload``) are the replica's narrow interface: the remote proxy
+(``repro.cluster.remote.RemoteReplica``) implements the same five methods
+over RPC, which is what lets one ``catch_up_from`` serve both the
+in-process and the cross-process topologies.
+
+Snapshot cadence (DESIGN.md §10): besides riding on compaction, snapshots
+trigger on WAL growth (``snapshot_every_bytes``) and wall-clock age
+(``snapshot_every_s``), so recovery time is bounded by policy instead of
+by how long compaction happens not to fire.
 """
 from __future__ import annotations
 
@@ -60,7 +70,9 @@ class ShardReplica:
     def __init__(self, shard_id: int, replica_id: int, cfg: IndexConfig,
                  serve_cfg: ServeConfig, key: jax.Array, root: str,
                  seed_dataset: np.ndarray, keep_snapshots: int = 2,
-                 wal_fsync: bool = True):
+                 wal_fsync: bool = True,
+                 snapshot_every_bytes: Optional[int] = None,
+                 snapshot_every_s: Optional[float] = None):
         self.shard_id = shard_id
         self.replica_id = replica_id
         self.cfg = cfg
@@ -68,6 +80,9 @@ class ShardReplica:
         self.key = key
         self.root = root
         self._wal_fsync = wal_fsync
+        self.snapshot_every_bytes = snapshot_every_bytes
+        self.snapshot_every_s = snapshot_every_s
+        self._last_snap_t = time.monotonic()
         os.makedirs(root, exist_ok=True)
         self.ckpt = CheckpointManager(os.path.join(root, "ckpt"),
                                       keep=keep_snapshots)
@@ -79,6 +94,7 @@ class ShardReplica:
         # test/chaos seams driven by the router's failure-injection hooks
         self.fail_next_queries = 0     # raise ReplicaKilled on next N queries
         self.slow_ms = 0.0             # added latency per query batch
+        self.recovered_records = 0     # WAL records replayed by a ctor recover
         if self.ckpt.latest_step() is None and self.last_seq == 0:
             # fresh replica: build from the seed slice and immediately take
             # the base snapshot, so recovery ALWAYS has a snapshot to start
@@ -90,7 +106,7 @@ class ShardReplica:
         else:
             # directory already holds state (restart path): recover from it
             self.engine = None
-            self.recover()
+            self.recovered_records = self.recover()
 
     # -- mutation log + apply ---------------------------------------------
 
@@ -117,12 +133,34 @@ class ShardReplica:
         else:
             raise ValueError(f"unknown WAL op {record.op}")
         self.last_seq = record.seq
-        if self.engine.index.compactions != self._last_snap_compactions:
-            # snapshot at compaction (DESIGN.md §7): the index is one flat
-            # segment right now, so the payload is minimal and the WAL
-            # prefix it covers can be truncated away.
-            self.snapshot()
+        self._maybe_snapshot()
         return removed
+
+    def _maybe_snapshot(self) -> None:
+        """Snapshot-cadence policy (DESIGN.md §10).
+
+        Three independent triggers, any of which fires a snapshot + WAL
+        truncation: (1) applying the mutation compacted the index (the
+        original ride-on-compaction trigger — one flat segment is the
+        cheapest state to capture); (2) the WAL grew past
+        ``snapshot_every_bytes``; (3) the last snapshot is older than
+        ``snapshot_every_s``.  (2) and (3) bound recovery work by policy:
+        WAL replay never exceeds one cadence interval of mutations, no
+        matter how long the compaction watermarks stay unfired.
+        """
+        if self.engine.index.compactions != self._last_snap_compactions:
+            # the index is one flat segment right now, so the payload is
+            # minimal and the WAL prefix it covers can be truncated away
+            self.snapshot()
+            return
+        if (self.snapshot_every_bytes is not None
+                and self.wal.size_bytes >= self.snapshot_every_bytes):
+            self.snapshot()
+            return
+        if (self.snapshot_every_s is not None
+                and time.monotonic() - self._last_snap_t
+                >= self.snapshot_every_s):
+            self.snapshot()
 
     # -- query -------------------------------------------------------------
 
@@ -186,8 +224,16 @@ class ShardReplica:
         })
         self.wal.truncate_upto(self.last_seq)
         self._last_snap_compactions = self.engine.index.compactions
+        self._last_snap_t = time.monotonic()
         self.snapshots_taken += 1
         return self.last_seq
+
+    def compact(self) -> None:
+        """Force a major compaction and snapshot the flat result (the
+        router's ``compact()`` fan-out lands here; the remote proxy ships
+        the same call as one RPC)."""
+        self.engine.compact()
+        self.snapshot()
 
     def kill(self) -> None:
         """Simulate a process death: drop in-memory state, keep disk."""
@@ -237,7 +283,41 @@ class ShardReplica:
         self.slow_ms = 0.0
         return replayed
 
-    def catch_up_from(self, peer: "ShardReplica") -> int:
+    # -- catch-up primitives (the replica interface the proxy mirrors) ------
+
+    def wal_records(self, after_seq: int = 0):
+        """Complete WAL records with seq > ``after_seq`` (peer-serving side
+        of record-level catch-up)."""
+        return self.wal.records(after_seq=after_seq)
+
+    def apply_records(self, records) -> int:
+        """Append + apply already-sequenced records from a peer (seq
+        preserved); returns how many were applied."""
+        for rec in records:
+            self.wal.append_record(rec)
+            self._apply(rec)
+        return len(records)
+
+    def adopt_payload(self, dataset, gids, next_gid: int, seq: int) -> None:
+        """Full state transfer: replace the engine with a peer's exported
+        payload at ``seq`` and snapshot it as our own durable base.
+
+        Rebuilds the hash tables from the shared params key (payload, not
+        IndexState — survives an emptied shard), exactly like recover().
+        """
+        dataset = np.asarray(dataset, np.int32)
+        state = build_index(self.cfg, self.key, jnp.asarray(dataset))
+        index = SegmentedIndex.from_checkpoint(
+            self.cfg, state, jnp.asarray(np.asarray(gids, np.int32)),
+            int(next_gid), delta_cap=self.serve_cfg.delta_cap,
+            cap_quantile=self.serve_cfg.cand_cap_quantile,
+            cap_sample=self.serve_cfg.cand_cap_sample)
+        self.engine = AnnServingEngine(self.cfg, self.serve_cfg, index=index)
+        self.last_seq = int(seq)
+        self._last_snap_compactions = self.engine.index.compactions
+        self.snapshot()                # own durable base at the new seq
+
+    def catch_up_from(self, peer) -> int:
         """Close the WAL gap against a live peer; returns #records applied.
 
         Mutations acknowledged while this replica was down never reached
@@ -245,34 +325,57 @@ class ShardReplica:
         at or before our ``last_seq + 1``), they are appended to our WAL
         (seq preserved) and applied — the cheap path.  If the peer already
         truncated them into a snapshot, fall back to a full state transfer
-        from the peer's engine.
+        of the peer's payload.  ``peer`` is anything with the replica
+        interface — an in-process ``ShardReplica`` or a ``RemoteReplica``
+        proxy; this method only touches ``last_seq`` / ``wal_records`` /
+        ``export_payload``, so catch-up works across any topology mix.
         """
         if peer.last_seq <= self.last_seq:
             return 0
-        missing = peer.wal.records(after_seq=self.last_seq)
+        missing = peer.wal_records(after_seq=self.last_seq)
         have = {r.seq for r in missing}
         if all(s in have for s in range(self.last_seq + 1,
                                         peer.last_seq + 1)):
-            for rec in missing:
-                self.wal.append_record(rec)
-                self._apply(rec)
-            return len(missing)
-        # gap truncated away on the peer: full state transfer (payload, not
-        # IndexState — survives an emptied shard and rebuilds hash tables
-        # from the shared params key, exactly like recover())
+            return self.apply_records(missing)
         gap = peer.last_seq - self.last_seq
         dataset, gids, next_gid = peer.export_payload()
-        state = build_index(self.cfg, self.key, jnp.asarray(dataset))
-        index = SegmentedIndex.from_checkpoint(
-            self.cfg, state, jnp.asarray(gids), next_gid,
-            delta_cap=self.serve_cfg.delta_cap,
-            cap_quantile=self.serve_cfg.cand_cap_quantile,
-            cap_sample=self.serve_cfg.cand_cap_sample)
-        self.engine = AnnServingEngine(self.cfg, self.serve_cfg, index=index)
-        self.last_seq = peer.last_seq
-        self._last_snap_compactions = self.engine.index.compactions
-        self.snapshot()                # own durable base at the new seq
+        self.adopt_payload(dataset, gids, next_gid, peer.last_seq)
         return gap
+
+    # -- router-facing introspection ---------------------------------------
+
+    @property
+    def next_gid(self) -> int:
+        """The shard-local gid counter (router restart re-derives the
+        global counter as the sum of these)."""
+        return self.engine.index.next_gid
+
+    @property
+    def num_live(self) -> int:
+        return self.engine.index.num_live
+
+    def validate_queries(self, queries) -> np.ndarray:
+        return self.engine._validate_queries(queries)
+
+    def bucket_for(self, q: int) -> int:
+        return self.engine.bucket_for(q)
+
+    def telemetry(self) -> dict:
+        """Per-replica stats the router's ``summary()`` aggregates — one
+        dict (and, remotely, one RPC) instead of N attribute reaches into
+        the engine."""
+        eng = self.engine
+        return {
+            "last_seq": self.last_seq,
+            "snapshots": self.snapshots_taken,
+            "wal_bytes": self.wal.size_bytes if not self.wal.closed else None,
+            "num_live": eng.index.num_live,
+            "bucket_cold_hits": eng.stats["bucket_cold_hits"],
+            "cand_buckets": dict(sorted(eng.stats["cand_buckets"].items())),
+            "overflow_hits": eng.stats["overflow_hits"],
+            "truncated_candidates": eng.stats["truncated_candidates"],
+            "skew_segments": eng.index.skew_summary(),
+        }
 
     def close(self) -> None:
         self.wal.close()

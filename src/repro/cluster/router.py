@@ -55,7 +55,7 @@ import numpy as np
 
 from repro.core import pipeline as pipe
 from repro.core.index import IndexConfig
-from repro.serve.engine import AnnServingEngine, ServeConfig
+from repro.serve.engine import ServeConfig
 
 from .replica import ReplicaKilled, ShardReplica
 from .wal import OP_DELETE, OP_INSERT, WalRecord
@@ -77,6 +77,19 @@ class ClusterConfig:
     health_failures: int = 3       # consecutive failures -> marked dead
     keep_snapshots: int = 2
     wal_fsync: bool = True         # tests may relax for speed
+    transport: str = "inproc"      # 'inproc' = ShardReplica objects in this
+                                   # process; 'process' = one worker
+                                   # subprocess per replica behind the RPC
+                                   # transport (DESIGN.md §10)
+    rpc_timeout_s: float = 120.0   # per-RPC deadline against a worker (init
+                                   # is exempt: it covers engine warm-up)
+    pipeline_depth: int = 1        # drain(): batches in flight at once; >1
+                                   # overlaps batch i's fold/cache work with
+                                   # batch i+1's worker compute — the knob
+                                   # that converts per-process parallelism
+                                   # into throughput at S>=4 workers
+    snapshot_every_bytes: Optional[int] = None   # replica snapshot cadence:
+    snapshot_every_s: Optional[float] = None     # WAL growth / age triggers
 
 
 class ClusterRouter:
@@ -98,17 +111,28 @@ class ClusterRouter:
             raise ValueError(f"dataset must be (n, dim); got {data.shape}")
         self.dim = int(data.shape[1])
         S, R = ccfg.num_shards, ccfg.num_replicas
+        # shard s owns gids {g : g % S == s}; seed rows keep gid == row
+        shard_rows = [data[s::S] for s in range(S)]
         self.replicas: List[List[ShardReplica]] = []
-        for s in range(S):
-            # shard s owns gids {g : g % S == s}; seed rows keep gid == row
-            shard_rows = data[s::S]
-            self.replicas.append([
-                ShardReplica(
-                    s, r, cfg, serve_cfg, self.key,
-                    os.path.join(root, f"shard{s:02d}", f"replica{r}"),
-                    shard_rows, keep_snapshots=ccfg.keep_snapshots,
-                    wal_fsync=ccfg.wal_fsync)
-                for r in range(R)])
+        if ccfg.transport == "process":
+            from .remote import spawn_replica_grid
+            self.replicas = spawn_replica_grid(
+                cfg, serve_cfg, ccfg, self.key, root, shard_rows)
+        elif ccfg.transport == "inproc":
+            for s in range(S):
+                self.replicas.append([
+                    ShardReplica(
+                        s, r, cfg, serve_cfg, self.key,
+                        os.path.join(root, f"shard{s:02d}", f"replica{r}"),
+                        shard_rows[s], keep_snapshots=ccfg.keep_snapshots,
+                        wal_fsync=ccfg.wal_fsync,
+                        snapshot_every_bytes=ccfg.snapshot_every_bytes,
+                        snapshot_every_s=ccfg.snapshot_every_s)
+                    for r in range(R)])
+        else:
+            raise ValueError(
+                f"unknown transport {ccfg.transport!r} "
+                "(expected 'inproc' or 'process')")
         self.next_gid = int(data.shape[0])
         self._shard_seq = [0] * S
         self._adopt_durable_state()
@@ -118,12 +142,14 @@ class ClusterRouter:
             collections.OrderedDict()
         self._fail_counts: Dict[Tuple[int, int], int] = {}
         self._parked: Dict[int, List[WalRecord]] = {}
-        # sized for the nesting worst case: S outer fan-out tasks each
-        # blocking on up to 2 replica futures (primary + hedge) — 3S keeps
-        # an inner future always schedulable, so the outer wait cannot
-        # deadlock the pool
+        # sized for the nesting worst case PER IN-FLIGHT BATCH: one dispatch
+        # task + S fan-out tasks each blocking on up to 2 replica futures
+        # (primary + hedge) — 3S+1 keeps an inner future always schedulable,
+        # so the outer wait cannot deadlock the pool; pipelining multiplies
+        # the whole tier by the number of batches in flight
+        depth = max(1, ccfg.pipeline_depth)
         self._pool = cf.ThreadPoolExecutor(
-            max_workers=max(4, S * 3),
+            max_workers=max(4, (S * 3 + 1) * depth),
             thread_name_prefix="cluster-query")
         self._inflight: set = set()
         self._inflight_lock = threading.Lock()
@@ -161,7 +187,7 @@ class ClusterRouter:
                 if rep is not leader and rep.last_seq < leader.last_seq:
                     rep.catch_up_from(leader)
             self._shard_seq[s] = leader.last_seq
-            total_next += leader.engine.index.next_gid
+            total_next += leader.next_gid
         self.next_gid = total_next
 
     # -- topology helpers --------------------------------------------------
@@ -176,11 +202,11 @@ class ClusterRouter:
     def _alive(self, s: int) -> List[ShardReplica]:
         return [r for r in self.replicas[s] if r.alive]
 
-    def _any_alive_engine(self) -> AnnServingEngine:
+    def _any_alive_replica(self) -> ShardReplica:
         for group in self.replicas:
             for r in group:
                 if r.alive:
-                    return r.engine
+                    return r
         raise ClusterUnavailable("no alive replica in the cluster")
 
     def _signature(self) -> tuple:
@@ -339,8 +365,7 @@ class ClusterRouter:
         for group in self.replicas:
             for rep in group:
                 if rep.alive:
-                    rep.engine.compact()
-                    rep.snapshot()
+                    rep.compact()
 
     def _require_alive(self, shards) -> None:
         for s in shards:
@@ -391,7 +416,7 @@ class ClusterRouter:
         memory, explicit ``rejected_queue_full``); an admitted query may
         still be shed at dispatch if its deadline expired in the queue.
         """
-        q = self._any_alive_engine()._validate_queries(queries)
+        q = self._any_alive_replica().validate_queries(queries)
         room = self.ccfg.max_queue_depth - len(self._queue)
         admit = max(0, min(q.shape[0], room))
         self.stats["rejected_queue_full"] += q.shape[0] - admit
@@ -404,10 +429,47 @@ class ClusterRouter:
     def drain(self) -> Tuple[np.ndarray, np.ndarray]:
         """Serve everything admitted; returns (dists, gids) (N, k) int32 in
         submit order.  Shed rows (deadline expired in queue) are filled
-        with -1 and counted in ``rejected_deadline``."""
+        with -1 and counted in ``rejected_deadline``.
+
+        With ``pipeline_depth > 1`` up to that many batches are dispatched
+        before the oldest one's results are folded — batch i+1's worker
+        compute overlaps batch i's merge/cache bookkeeping, which is what
+        lets a multi-process cluster keep every worker busy instead of
+        idling them during the router's single-threaded fold.  Results are
+        still resolved strictly in submit order, so the output contract is
+        unchanged (depth 1 IS the old sequential drain).
+        """
         k = self.cfg.k
+        depth = max(1, self.ccfg.pipeline_depth)
         out_d: List[np.ndarray] = []
         out_i: List[np.ndarray] = []
+        inflight: "collections.deque" = collections.deque()
+
+        def resolve(entry) -> None:
+            # runs on the drain caller's thread: cache writes and stats
+            # that aren't _bump'd stay single-threaded
+            d, i, todo_pos, todo_rows, sig, fut = entry
+            if fut is not None:
+                try:
+                    bd, bi = fut.result()
+                except ClusterUnavailable:
+                    # a shard lost its last replica mid-drain: these rows
+                    # stay -1 (explicit failure), and the drain CONTINUES —
+                    # raising here would orphan the still-queued rows, and
+                    # a later caller's drain would return them interleaved
+                    # with its own (row misalignment)
+                    self.stats["dispatch_failures"] += 1
+                    out_d.append(d)
+                    out_i.append(i)
+                    return
+                self.stats["cache_misses"] += len(todo_rows)
+                self.stats["served"] += len(todo_rows)
+                for j, pos in enumerate(todo_pos):
+                    d[pos], i[pos] = bd[j], bi[j]
+                    self._cache_put(todo_rows[j].tobytes(), sig, bd[j], bi[j])
+            out_d.append(d)
+            out_i.append(i)
+
         while self._queue:
             take = self._queue[: self.serve_cfg.batch_size]
             self._queue = self._queue[len(take):]
@@ -429,26 +491,13 @@ class ClusterRouter:
                 else:
                     todo_pos.append(pos)
                     todo_rows.append(row)
-            if todo_rows:
-                try:
-                    bd, bi = self._dispatch(np.stack(todo_rows))
-                except ClusterUnavailable:
-                    # a shard lost its last replica mid-drain: these rows
-                    # stay -1 (explicit failure), and the drain CONTINUES —
-                    # raising here would orphan the still-queued rows, and
-                    # a later caller's drain would return them interleaved
-                    # with its own (row misalignment)
-                    self.stats["dispatch_failures"] += 1
-                    out_d.append(d)
-                    out_i.append(i)
-                    continue
-                self.stats["cache_misses"] += len(todo_rows)
-                self.stats["served"] += len(todo_rows)
-                for j, pos in enumerate(todo_pos):
-                    d[pos], i[pos] = bd[j], bi[j]
-                    self._cache_put(todo_rows[j].tobytes(), sig, bd[j], bi[j])
-            out_d.append(d)
-            out_i.append(i)
+            fut = (self._pool.submit(self._dispatch, np.stack(todo_rows))
+                   if todo_rows else None)
+            inflight.append((d, i, todo_pos, todo_rows, sig, fut))
+            if len(inflight) >= depth:
+                resolve(inflight.popleft())
+        while inflight:
+            resolve(inflight.popleft())
         if not out_d:
             return (np.zeros((0, k), np.int32), np.zeros((0, k), np.int32))
         return np.concatenate(out_d), np.concatenate(out_i)
@@ -480,12 +529,14 @@ class ClusterRouter:
     def _dispatch(self, rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """Fan one batch out to every shard and fold the top-k lists."""
         n = rows.shape[0]
-        bucket = self._any_alive_engine().bucket_for(n)
+        bucket = self._any_alive_replica().bucket_for(n)
         if n < bucket:
             rows = np.concatenate(
                 [rows, np.zeros((bucket - n, self.dim), np.int32)])
-        self.stats["batches"] += 1
-        self.stats["queries"] += n
+        # _dispatch runs on a pool thread once drain() pipelines, so the
+        # counters must go through the lock
+        self._bump("batches")
+        self._bump("queries", n)
         # genuine fan-out: all shards in flight at once, so batch latency is
         # ~max(per-shard) not sum, and one shard's hedge wait does not stall
         # the others' dispatch
@@ -629,43 +680,37 @@ class ClusterRouter:
     def summary(self) -> dict:
         shards = []
         for s, group in enumerate(self.replicas):
-            shards.append({
-                "shard": s,
-                "seq": self._shard_seq[s],
-                "replicas": [{
+            reps = []
+            for rep in group:
+                # one telemetry() per replica (and, on the process
+                # transport, one RPC) instead of N attribute reaches into
+                # an engine the router may not even host: covers the warmup
+                # cold-hit counter, the candidate buckets the compacted
+                # probe actually served at, and the §9 skew roll-up.  A
+                # replica may be dead without being marked yet (SIGKILL'd
+                # worker the health tracker hasn't condemned) — stats must
+                # never be the thing that surfaces that
+                try:
+                    t = rep.telemetry() if rep.alive else {}
+                except ReplicaKilled:
+                    t = {}
+                reps.append({
                     "replica": rep.replica_id,
                     "alive": rep.alive,
                     "last_seq": rep.last_seq,
-                    "snapshots": rep.snapshots_taken,
-                    "wal_bytes": (rep.wal.size_bytes
-                                  if not rep.wal.closed else None),
-                    "num_live": (rep.engine.index.num_live
-                                 if rep.alive else None),
-                    # unplanned (batch x candidate)-bucket compiles on the
-                    # replica (should stay flat after warmup; a hedge storm
-                    # with cold buckets shows up here) + the candidate
-                    # buckets its compacted probe actually served at
-                    "bucket_cold_hits": (
-                        rep.engine.stats["bucket_cold_hits"]
-                        if rep.alive else None),
-                    "cand_buckets": (
-                        dict(sorted(
-                            rep.engine.stats["cand_buckets"].items()))
-                        if rep.alive else None),
-                    # two-level compaction skew telemetry (DESIGN.md §9):
-                    # overflow-rung hits and truncated candidates roll up
-                    # per replica so fleet-wide skew regressions are one
-                    # summary() away
-                    "overflow_hits": (
-                        rep.engine.stats["overflow_hits"]
-                        if rep.alive else None),
-                    "truncated_candidates": (
-                        rep.engine.stats["truncated_candidates"]
-                        if rep.alive else None),
-                    "skew_segments": (
-                        rep.engine.index.skew_summary()
-                        if rep.alive else None),
-                } for rep in group],
+                    "snapshots": t.get("snapshots"),
+                    "wal_bytes": t.get("wal_bytes"),
+                    "num_live": t.get("num_live"),
+                    "bucket_cold_hits": t.get("bucket_cold_hits"),
+                    "cand_buckets": t.get("cand_buckets"),
+                    "overflow_hits": t.get("overflow_hits"),
+                    "truncated_candidates": t.get("truncated_candidates"),
+                    "skew_segments": t.get("skew_segments"),
+                })
+            shards.append({
+                "shard": s,
+                "seq": self._shard_seq[s],
+                "replicas": reps,
             })
         return {
             **self.stats,

@@ -1,0 +1,309 @@
+"""Length-prefixed binary RPC transport for shard workers (DESIGN.md §10).
+
+The multi-process cluster (``repro.cluster.worker`` / ``RemoteReplica``)
+speaks this wire protocol over local stream sockets (``AF_UNIX``).  Design
+constraints, in order:
+
+  * **no pickle on the hot path** — a query batch is a numpy array and it
+    crosses the wire as its raw buffer plus a 14-byte descriptor.  Small
+    scalar metadata (method name, seq numbers, counts) rides in a compact
+    JSON header; arrays NEVER do;
+  * **zero-copy where it counts** — the sender hands array buffers
+    (``memoryview``) straight to the socket without concatenating them
+    into the frame (large frames are vectored as separate ``sendall``
+    calls; only small frames are coalesced, where one copy is cheaper
+    than extra syscalls).  The receiver reads the whole frame into one
+    buffer and returns ``np.frombuffer`` views into it — the arrays
+    borrow the receive buffer, nothing is re-copied or re-parsed;
+  * **self-delimiting frames** — a ``u64`` length prefix, then a magic +
+    kind + request id + typed array descriptors.  A torn or corrupt frame
+    (dead peer mid-write) surfaces as ``ConnectionError``, which the
+    replica proxy maps to ``ReplicaKilled`` so the router's existing
+    failover discipline handles a SIGKILL'd worker like any dead replica.
+
+Frame layout (little-endian)::
+
+    u64 frame_len                    bytes after this field
+    u32 magic      0x52504331 'RPC1'
+    u8  kind       1=request  2=response  3=error
+    u32 req_id     echoes the request on its response/error
+    u32 meta_len   JSON header length
+    u8  n_arrays
+    meta           UTF-8 JSON (method + scalars; errors: etype/emsg)
+    per array:     u8 dtype_code  u8 ndim  u32 shape[ndim]
+    array bytes    raw buffers, back to back, in descriptor order
+
+Exceptions raised by a worker's handler are shipped back as an ERROR frame
+carrying the exception class name; :func:`raise_remote_error` re-raises the
+matching local class (``ReplicaKilled``, ``ReplicaDiverged``, ``ValueError``,
+…) so cross-process error semantics equal in-process ones.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import struct
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Connection", "RemoteError", "KIND_REQUEST", "KIND_RESPONSE",
+           "KIND_ERROR", "send_frame", "recv_frame", "listen_unix",
+           "connect_unix", "raise_remote_error"]
+
+_MAGIC = 0x52504331                       # 'RPC1'
+_PREAMBLE = struct.Struct("<Q")           # frame_len
+_FIXED = struct.Struct("<IBIIB")          # magic, kind, req_id, meta_len, n_arrays
+_DESC = struct.Struct("<BB")              # dtype_code, ndim
+_DIM = struct.Struct("<I")
+
+KIND_REQUEST = 1
+KIND_RESPONSE = 2
+KIND_ERROR = 3
+
+# the closed set of dtypes the cluster moves; a wire protocol enumerates its
+# types explicitly instead of trusting dtype strings from the peer
+_DTYPES: List[np.dtype] = [np.dtype(t) for t in (
+    np.int32, np.int64, np.uint32, np.uint64, np.float32, np.float64,
+    np.uint8, np.int8, np.int16, np.uint16, np.bool_)]
+_DTYPE_CODE: Dict[np.dtype, int] = {dt: i for i, dt in enumerate(_DTYPES)}
+
+# one frame bounded well above any legitimate payload (a full shard state
+# transfer); a corrupt length prefix must not trigger a huge allocation
+_MAX_FRAME = 1 << 34
+
+# below this, coalescing into one send beats per-buffer syscalls
+_COALESCE_BYTES = 64 * 1024
+
+
+class RemoteError(RuntimeError):
+    """A worker-side exception of a class this process cannot map."""
+
+
+def _encode_header(kind: int, req_id: int, meta: Optional[dict],
+                   arrays: Sequence[np.ndarray]) -> Tuple[bytes, list]:
+    meta_b = json.dumps(meta or {}, separators=(",", ":")).encode()
+    descs = []
+    bufs = []
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        code = _DTYPE_CODE.get(a.dtype)
+        if code is None:
+            raise TypeError(f"dtype {a.dtype} is not on the wire-protocol "
+                            f"whitelist {[str(d) for d in _DTYPES]}")
+        if a.ndim > 255:
+            raise ValueError(f"ndim {a.ndim} exceeds protocol limit")
+        descs.append(_DESC.pack(code, a.ndim)
+                     + b"".join(_DIM.pack(d) for d in a.shape))
+        # cast("B") rejects shapes containing 0; an empty array has no
+        # payload bytes anyway (its descriptor alone reconstructs it)
+        bufs.append(memoryview(a).cast("B") if a.size else memoryview(b""))
+    head = (_FIXED.pack(_MAGIC, kind, req_id, len(meta_b), len(arrays))
+            + meta_b + b"".join(descs))
+    return head, bufs
+
+
+def send_frame(sock: socket.socket, kind: int, req_id: int,
+               meta: Optional[dict] = None,
+               arrays: Sequence[np.ndarray] = ()) -> None:
+    head, bufs = _encode_header(kind, req_id, meta, arrays)
+    total = len(head) + sum(b.nbytes for b in bufs)
+    pieces = [_PREAMBLE.pack(total), head] + bufs
+    if total < _COALESCE_BYTES:
+        sock.sendall(b"".join(pieces))
+    else:
+        # vectored send: big array buffers go to the kernel as-is
+        for p in pieces:
+            sock.sendall(p)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> memoryview:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        r = sock.recv_into(view[got:], n - got)
+        if r == 0:
+            raise ConnectionError(
+                f"peer closed mid-frame ({got}/{n} bytes)")
+        got += r
+    return view
+
+
+def recv_frame(sock: socket.socket) -> Tuple[int, int, dict,
+                                             List[np.ndarray]]:
+    """Read one frame; returns (kind, req_id, meta, arrays).
+
+    The arrays are zero-copy ``np.frombuffer`` views over the single
+    receive buffer (they keep it alive; callers may hold them freely).
+    """
+    (frame_len,) = _PREAMBLE.unpack(bytes(_recv_exact(sock, _PREAMBLE.size)))
+    if not 0 < frame_len <= _MAX_FRAME:
+        raise ConnectionError(f"implausible frame length {frame_len}")
+    buf = _recv_exact(sock, frame_len)
+    if frame_len < _FIXED.size:
+        raise ConnectionError(f"short frame ({frame_len} bytes)")
+    magic, kind, req_id, meta_len, n_arrays = _FIXED.unpack_from(buf, 0)
+    if magic != _MAGIC:
+        raise ConnectionError(f"bad frame magic 0x{magic:08x}")
+    pos = _FIXED.size
+    if pos + meta_len > frame_len:
+        raise ConnectionError("frame meta overruns frame")
+    meta = json.loads(bytes(buf[pos: pos + meta_len]) or b"{}")
+    pos += meta_len
+    shapes = []
+    for _ in range(n_arrays):
+        if pos + _DESC.size > frame_len:
+            raise ConnectionError("frame descriptor overruns frame")
+        code, ndim = _DESC.unpack_from(buf, pos)
+        pos += _DESC.size
+        if code >= len(_DTYPES):
+            raise ConnectionError(f"unknown wire dtype code {code}")
+        shape = []
+        for _ in range(ndim):
+            (d,) = _DIM.unpack_from(buf, pos)
+            pos += _DIM.size
+            shape.append(d)
+        shapes.append((_DTYPES[code], tuple(shape)))
+    arrays = []
+    for dt, shape in shapes:
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+        if pos + nbytes > frame_len:
+            raise ConnectionError("array payload overruns frame")
+        arrays.append(np.frombuffer(buf[pos: pos + nbytes],
+                                    dtype=dt).reshape(shape))
+        pos += nbytes
+    return kind, req_id, meta, arrays
+
+
+# -- exception mapping -------------------------------------------------------
+
+def _error_classes() -> Dict[str, type]:
+    # imported lazily: transport is the bottom layer and must not create an
+    # import cycle with replica/router
+    from .replica import ReplicaDiverged, ReplicaKilled
+    return {
+        "ReplicaKilled": ReplicaKilled,
+        "ReplicaDiverged": ReplicaDiverged,
+        "ValueError": ValueError,
+        "TypeError": TypeError,
+        "KeyError": KeyError,
+        "OSError": OSError,
+        "RuntimeError": RuntimeError,
+    }
+
+
+def error_meta(exc: BaseException) -> dict:
+    return {"etype": type(exc).__name__, "emsg": str(exc)}
+
+
+def raise_remote_error(meta: dict) -> None:
+    cls = _error_classes().get(meta.get("etype", ""), RemoteError)
+    msg = f"[worker] {meta.get('etype', '?')}: {meta.get('emsg', '')}"
+    raise cls(msg)
+
+
+# -- sockets -----------------------------------------------------------------
+
+def listen_unix(path: str) -> socket.socket:
+    """Bind + listen on a fresh unix socket (stale path unlinked first)."""
+    try:
+        os.unlink(path)
+    except FileNotFoundError:
+        pass
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    srv.bind(path)
+    srv.listen(4)
+    return srv
+
+
+def connect_unix(path: str, timeout_s: float = 30.0,
+                 poll_s: float = 0.05,
+                 giveup=None) -> socket.socket:
+    """Connect, retrying until the server binds (worker boot is async).
+
+    ``giveup()`` (e.g. "the worker process already exited") short-circuits
+    the wait with a clear error instead of burning the whole timeout.
+    """
+    import time
+    deadline = time.monotonic() + timeout_s
+    while True:
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        try:
+            sock.connect(path)
+            return sock
+        except (FileNotFoundError, ConnectionRefusedError) as err:
+            sock.close()
+            if giveup is not None and giveup():
+                raise ConnectionError(
+                    f"worker died before binding {path}") from err
+            if time.monotonic() > deadline:
+                raise ConnectionError(
+                    f"timed out connecting to {path}") from err
+            time.sleep(poll_s)
+
+
+class Connection:
+    """One framed RPC connection (client side or server side).
+
+    Client usage: ``meta, arrays = conn.request("query", meta, arrays)``.
+    The per-connection lock pairs each request with its response, so any
+    number of router threads can share one proxy; requests to ONE worker
+    serialize (the worker's replica is single-threaded anyway — engines
+    are not thread-safe vs mutation), while different workers proceed in
+    parallel.  All socket-level failures surface as ``ConnectionError``.
+    """
+
+    def __init__(self, sock: socket.socket,
+                 timeout_s: Optional[float] = None):
+        self.sock = sock
+        if timeout_s is not None:
+            sock.settimeout(timeout_s)
+        self._lock = threading.Lock()
+        self._next_id = 0
+
+    def request(self, method: str, meta: Optional[dict] = None,
+                arrays: Sequence[np.ndarray] = (),
+                ) -> Tuple[dict, List[np.ndarray]]:
+        m = dict(meta or {})
+        m["method"] = method
+        with self._lock:
+            self._next_id += 1
+            rid = self._next_id
+            try:
+                send_frame(self.sock, KIND_REQUEST, rid, m, arrays)
+                kind, got_id, rmeta, rarrays = recv_frame(self.sock)
+            except (OSError, socket.timeout) as err:
+                raise ConnectionError(f"rpc {method!r} failed: {err}") from err
+        if got_id != rid:
+            raise ConnectionError(
+                f"rpc {method!r}: response id {got_id} != request id {rid}")
+        if kind == KIND_ERROR:
+            raise_remote_error(rmeta)
+        if kind != KIND_RESPONSE:
+            raise ConnectionError(f"rpc {method!r}: unexpected kind {kind}")
+        return rmeta, rarrays
+
+    # -- server side -------------------------------------------------------
+
+    def recv_request(self) -> Tuple[int, str, dict, List[np.ndarray]]:
+        kind, rid, meta, arrays = recv_frame(self.sock)
+        if kind != KIND_REQUEST:
+            raise ConnectionError(f"expected request frame, got kind {kind}")
+        return rid, meta.pop("method", ""), meta, arrays
+
+    def respond(self, req_id: int, meta: Optional[dict] = None,
+                arrays: Sequence[np.ndarray] = ()) -> None:
+        send_frame(self.sock, KIND_RESPONSE, req_id, meta, arrays)
+
+    def respond_error(self, req_id: int, exc: BaseException) -> None:
+        send_frame(self.sock, KIND_ERROR, req_id, error_meta(exc))
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass

@@ -1,0 +1,231 @@
+"""Shard-worker subprocess: one ``ShardReplica`` behind the RPC transport.
+
+``python -m repro.cluster.worker --socket /path/sock`` owns exactly one
+replica — its own JAX client, WAL, and checkpoint directory — and serves
+the replica interface over a unix socket (DESIGN.md §10): ``init``,
+``query``, ``log_and_apply``, ``apply_records`` / ``wal_records`` /
+``export_payload`` / ``adopt_payload`` (the catch-up quartet),
+``snapshot`` / ``compact`` / ``recover``, ``telemetry`` / ``health``, and
+the chaos seams (``set_chaos``).  The parent process talks to it through
+:class:`repro.cluster.remote.RemoteReplica`.
+
+The worker is deliberately single-threaded: engines are not thread-safe
+versus mutation, and the router already serializes one worker's requests
+on the proxy's connection lock — cross-shard parallelism comes from
+running S×R of these *processes*, each with its own GIL and XLA CPU
+client, which is the whole point of the exercise.
+
+Boot protocol: bind + listen on ``--socket``, then accept.  A fresh
+replica is created by the ``init`` request (config + seed rows arrive
+over the wire — nothing is pickled to disk for the worker to trust); a
+worker restarted over an existing root directory recovers from its own
+snapshot + WAL inside the same ``init`` call and reports how many records
+it replayed.  A SIGKILL at ANY point is survivable by construction:
+acknowledged mutations are fsync'd in the WAL before the ack leaves the
+process.
+
+WalRecord batches cross the wire without pickle: per-record scalars
+(seq/op) ride in the JSON meta, gids/points ride as raw arrays, in
+record order — ``pack_records``/``unpack_records`` below are shared with
+the client proxy so the two sides cannot drift.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import sys
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .transport import Connection, listen_unix
+from .wal import OP_INSERT, WalRecord
+
+__all__ = ["main", "pack_records", "unpack_records"]
+
+
+def pack_records(records) -> Tuple[dict, List[np.ndarray]]:
+    """(meta, arrays) wire form of a WalRecord batch (no pickle)."""
+    meta, arrays = [], []
+    for rec in records:
+        meta.append({"seq": int(rec.seq), "op": int(rec.op),
+                     "pts": rec.points is not None})
+        arrays.append(np.asarray(rec.gids, np.int32))
+        if rec.points is not None:
+            arrays.append(np.asarray(rec.points, np.int32))
+    return {"records": meta}, arrays
+
+
+def unpack_records(meta: dict, arrays: List[np.ndarray]) -> List[WalRecord]:
+    out, pos = [], 0
+    for m in meta.get("records", ()):
+        gids = np.ascontiguousarray(arrays[pos], np.int32)
+        pos += 1
+        points = None
+        if m["pts"]:
+            points = np.ascontiguousarray(arrays[pos], np.int32)
+            pos += 1
+        out.append(WalRecord(seq=int(m["seq"]), op=int(m["op"]),
+                             gids=gids, points=points))
+    return out
+
+
+class _Shutdown(Exception):
+    """Raised by the shutdown handler to leave the serve loop cleanly."""
+
+
+class WorkerServer:
+    """Request dispatcher around one (lazily ``init``-ed) ShardReplica."""
+
+    def __init__(self):
+        self.replica = None
+
+    # every handler: (meta, arrays) -> (meta, arrays)
+
+    def _handle_init(self, meta, arrays):
+        # imported here, not at module top: argparse/--help and the boot
+        # handshake must not pay (or fail on) the jax import
+        import jax.numpy as jnp
+
+        from repro.core.index import IndexConfig
+        from repro.serve.engine import ServeConfig
+        from .replica import ShardReplica
+
+        key_data, seed = arrays
+        key = jnp.asarray(np.ascontiguousarray(key_data, np.uint32))
+        self.replica = ShardReplica(
+            int(meta["shard_id"]), int(meta["replica_id"]),
+            IndexConfig(**meta["cfg"]), ServeConfig(**meta["serve_cfg"]),
+            key, meta["root"], np.ascontiguousarray(seed, np.int32),
+            keep_snapshots=int(meta.get("keep_snapshots", 2)),
+            wal_fsync=bool(meta.get("wal_fsync", True)),
+            snapshot_every_bytes=meta.get("snapshot_every_bytes"),
+            snapshot_every_s=meta.get("snapshot_every_s"))
+        return {"last_seq": self.replica.last_seq,
+                "next_gid": self.replica.next_gid,
+                "dim": self.replica.engine.index.dim,
+                "replayed": self.replica.recovered_records,
+                "pid": os.getpid()}, ()
+
+    def _handle_query(self, meta, arrays):
+        d, i = self.replica.query(np.ascontiguousarray(arrays[0], np.int32),
+                                  int(meta["n_real"]))
+        return {}, (np.asarray(d, np.int32), np.asarray(i, np.int32))
+
+    def _handle_log_and_apply(self, meta, arrays):
+        (rec,) = unpack_records(meta, arrays)
+        removed = self.replica.log_and_apply(rec)
+        return {"removed": int(removed), "last_seq": self.replica.last_seq,
+                "next_gid": self.replica.next_gid}, ()
+
+    def _handle_wal_records(self, meta, arrays):
+        return pack_records(
+            self.replica.wal_records(after_seq=int(meta["after_seq"])))
+
+    def _handle_apply_records(self, meta, arrays):
+        applied = self.replica.apply_records(unpack_records(meta, arrays))
+        return {"applied": applied, "last_seq": self.replica.last_seq,
+                "next_gid": self.replica.next_gid}, ()
+
+    def _handle_export_payload(self, meta, arrays):
+        dataset, gids, next_gid = self.replica.export_payload()
+        return {"next_gid": int(next_gid)}, (dataset, gids)
+
+    def _handle_adopt_payload(self, meta, arrays):
+        self.replica.adopt_payload(arrays[0], arrays[1],
+                                   int(meta["next_gid"]), int(meta["seq"]))
+        return {"last_seq": self.replica.last_seq}, ()
+
+    def _handle_snapshot(self, meta, arrays):
+        return {"step": self.replica.snapshot()}, ()
+
+    def _handle_compact(self, meta, arrays):
+        self.replica.compact()
+        return {"last_seq": self.replica.last_seq}, ()
+
+    def _handle_recover(self, meta, arrays):
+        replayed = self.replica.recover()
+        return {"replayed": replayed, "last_seq": self.replica.last_seq,
+                "next_gid": self.replica.next_gid}, ()
+
+    def _handle_telemetry(self, meta, arrays):
+        return self.replica.telemetry(), ()
+
+    def _handle_health(self, meta, arrays):
+        return {"ok": self.replica is not None, "pid": os.getpid(),
+                "last_seq": (self.replica.last_seq
+                             if self.replica is not None else None)}, ()
+
+    def _handle_set_chaos(self, meta, arrays):
+        if "fail_next_queries" in meta:
+            self.replica.fail_next_queries = int(meta["fail_next_queries"])
+        if "slow_ms" in meta:
+            self.replica.slow_ms = float(meta["slow_ms"])
+        return {}, ()
+
+    def _handle_get_chaos(self, meta, arrays):
+        return {"fail_next_queries": self.replica.fail_next_queries,
+                "slow_ms": self.replica.slow_ms}, ()
+
+    def _handle_shutdown(self, meta, arrays):
+        raise _Shutdown()
+
+    def dispatch(self, method: str, meta, arrays):
+        handler = getattr(self, f"_handle_{method}", None)
+        if handler is None:
+            raise ValueError(f"unknown rpc method {method!r}")
+        if self.replica is None and method not in ("init", "health",
+                                                   "shutdown"):
+            raise RuntimeError(f"rpc {method!r} before init")
+        return handler(meta, arrays)
+
+    def serve_connection(self, conn: Connection) -> None:
+        while True:
+            try:
+                rid, method, meta, arrays = conn.recv_request()
+            except ConnectionError:
+                return                  # router went away; await reconnect
+            try:
+                rmeta, rarrays = self.dispatch(method, meta, arrays)
+            except _Shutdown:
+                conn.respond(rid, {"ok": True})
+                raise
+            except Exception as exc:    # ship the failure, keep serving —
+                conn.respond_error(rid, exc)   # the router decides health
+                continue
+            conn.respond(rid, rmeta, rarrays)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--socket", required=True,
+                    help="unix socket path to bind")
+    args = ap.parse_args(argv)
+    srv = listen_unix(args.socket)
+    server = WorkerServer()
+    try:
+        while True:
+            sock, _ = srv.accept()
+            conn = Connection(sock)
+            try:
+                server.serve_connection(conn)
+            except _Shutdown:
+                return 0
+            finally:
+                conn.close()
+    finally:
+        if server.replica is not None:
+            try:
+                server.replica.close()
+            except Exception:
+                pass
+        srv.close()
+        try:
+            os.unlink(args.socket)
+        except OSError:
+            pass
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -291,11 +291,17 @@ class QualityRun:
 
     def check_cluster(self, cfg: IndexConfig,
                       num_shards: int = 2, num_replicas: int = 2,
-                      root_dir: Optional[str] = None) -> dict:
+                      root_dir: Optional[str] = None,
+                      transport: str = "inproc") -> dict:
         """Cluster-path oracle (DESIGN.md §7): the sharded+replicated
         ``ClusterRouter`` == flat ``query_index``, bit-for-bit — before AND
         after a replica kill + WAL-replay recovery (the recovered replica
         is forced to serve by killing its peer).
+
+        ``transport='process'`` runs the identical oracle against worker
+        *subprocesses* behind the RPC transport (DESIGN.md §10) — the
+        bit-identity and kill/recovery claims must survive the wire, and
+        the kill becomes a real SIGKILL.
 
         Bit-identity between a sharded and a flat index requires the
         candidate gather to be non-truncating (a shard examines its own
@@ -325,7 +331,8 @@ class QualityRun:
                 ClusterConfig(num_shards=num_shards,
                               num_replicas=num_replicas,
                               hedge_ms=60000.0,  # oracle: never hedge on a
-                              wal_fsync=False),  # cold compile
+                              wal_fsync=False,   # cold compile
+                              transport=transport),
                 np.asarray(self.data), root, key=self.key)
             cd, ci = router.query(np.asarray(self.queries))
             matches = bool(np.array_equal(cd, fd) and np.array_equal(ci, fi))
@@ -351,6 +358,7 @@ class QualityRun:
             "cluster_replicas": num_replicas,
             "cluster_recoveries": summary["recoveries"],
             "cluster_oracle_cap": cfg.candidate_cap,
+            "cluster_transport": transport,
         }
 
     def check_compact(self, cfg: IndexConfig, flat=None) -> dict:

@@ -1,9 +1,17 @@
-"""Cluster serving launcher (DESIGN.md §7): S shards x R replicas behind the
-``ClusterRouter`` — sharded fan-out, replica hedging/failover, WAL-durable
+"""Cluster serving launcher (DESIGN.md §7/§10): S shards x R replicas behind
+the ``ClusterRouter`` — sharded fan-out, replica hedging/failover, WAL-durable
 mutations, admission control — with an optional kill/recover chaos drill.
 
   PYTHONPATH=src python -m repro.launch.cluster_serve \
       --n 20000 --dim 32 --shards 2 --replicas 2 --queries 256 --chaos
+
+``--workers N`` switches to the multi-process deployment: N shard-worker
+subprocesses (x ``--replicas`` each) behind the RPC transport, supervised by
+this launcher — a worker process that dies is respawned and recovered
+(snapshot + WAL replay + peer catch-up) by the supervision sweep.  The
+chaos drill then SIGKILLs a real process instead of flipping a flag:
+
+  PYTHONPATH=src python -m repro.launch.cluster_serve --workers 4 --chaos
 """
 from __future__ import annotations
 
@@ -20,6 +28,23 @@ from repro.core.baselines import brute_force_l1, recall
 from repro.core.index import IndexConfig
 from repro.data import ann_synthetic as ds
 from repro.serve.engine import ServeConfig
+
+
+def supervise_once(router: ClusterRouter) -> list:
+    """One supervision sweep over a multi-process router: any replica whose
+    worker *process* is gone (crash, OOM-kill, SIGKILL) is respawned and
+    recovered — snapshot restore + WAL replay in the fresh worker, then
+    peer catch-up for anything acknowledged while it was down.  Returns the
+    (shard, replica) pairs restarted; call this from a periodic loop (or
+    after an alert) in a long-running deployment."""
+    restarted = []
+    for s, group in enumerate(router.replicas):
+        for r, rep in enumerate(group):
+            handle = getattr(rep, "handle", None)
+            if handle is not None and not handle.running():
+                router.recover_replica(s, r)
+                restarted.append([s, r])
+    return restarted
 
 
 def main(argv=None):
@@ -39,6 +64,13 @@ def main(argv=None):
                     help="WAL/snapshot directory (default: a temp dir)")
     ap.add_argument("--chaos", action="store_true",
                     help="kill a replica mid-traffic, then recover it")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="multi-process mode: this many shard workers "
+                         "(x --replicas) as supervised subprocesses over "
+                         "the RPC transport (overrides --shards)")
+    ap.add_argument("--pipeline-depth", type=int, default=None,
+                    help="drain-pipeline depth (default: 4 with --workers, "
+                         "else 1)")
     args = ap.parse_args(argv)
 
     spec = ds.DatasetSpec("cluster", n=args.n, dim=args.dim, universe=128,
@@ -50,24 +82,41 @@ def main(argv=None):
                       candidate_cap=128, universe=spec.universe, k=args.k,
                       rerank_chunk=1024)
     root = args.root or tempfile.mkdtemp(prefix="cluster_serve_")
+    shards = args.workers if args.workers is not None else args.shards
+    transport = "process" if args.workers is not None else "inproc"
+    depth = (args.pipeline_depth if args.pipeline_depth is not None
+             else (4 if args.workers is not None else 1))
     router = ClusterRouter(
         cfg, ServeConfig(batch_size=args.batch),
-        ClusterConfig(num_shards=args.shards, num_replicas=args.replicas,
-                      hedge_ms=args.hedge_ms),
+        ClusterConfig(num_shards=shards, num_replicas=args.replicas,
+                      hedge_ms=args.hedge_ms, transport=transport,
+                      pipeline_depth=depth),
         data, root)
 
     d, i = router.query(queries)
     td, ti = brute_force_l1(jnp.asarray(data), jnp.asarray(queries), args.k)
-    out = {"recall": round(recall(i, np.asarray(ti)), 4)}
+    out = {"recall": round(recall(i, np.asarray(ti)), 4),
+           "transport": transport, "shards": shards,
+           "pipeline_depth": depth}
 
     if args.chaos:
-        router.replicas[0][0].fail_next_queries = 10 ** 9  # unannounced
+        if transport == "process":
+            # the real drill: SIGKILL the worker process, unannounced
+            router.replicas[0][0].handle.sigkill()
+        else:
+            router.replicas[0][0].fail_next_queries = 10 ** 9
         router.clear_cache()                               # real dispatches
         d2, i2 = router.query(queries)
         out["chaos_identical"] = bool(np.array_equal(i, i2))
-        router.replicas[0][0].alive = False
-        gids = router.insert(queries[: args.batch])        # WAL'd while down
-        out["recovery"] = router.recover_replica(0, 0)
+        if transport == "process":
+            # crash-restart: the supervision sweep finds the dead process,
+            # respawns it, and recovers it from its own WAL + peers
+            out["supervisor_restarted"] = supervise_once(router)
+            gids = router.insert(queries[: args.batch])
+        else:
+            router.replicas[0][0].alive = False
+            gids = router.insert(queries[: args.batch])    # WAL'd while down
+            out["recovery"] = router.recover_replica(0, 0)
         router.delete(gids)
 
     out.update(router.summary())

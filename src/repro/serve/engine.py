@@ -44,7 +44,8 @@ from repro.core.index import IndexConfig, IndexState
 from repro.core.segments import SegmentedIndex
 
 __all__ = ["ServeConfig", "AnnServingEngine", "enable_compilation_cache",
-           "compilation_cache_stats"]
+           "compilation_cache_stats", "shape_buckets", "bucket_for",
+           "validate_queries"]
 
 
 # --------------------------------------------------------------------------
@@ -137,6 +138,55 @@ class ServeConfig:
     autotune_calib: int = 32       # calibration queries for the autotuner
 
 
+def shape_buckets(serve_cfg: ServeConfig) -> List[int]:
+    """Padded batch shapes a ``serve_cfg`` dispatches: pow2 up to batch_size.
+
+    Pure function of the config so remote clients (``RemoteReplica``) can
+    compute bucket shapes without holding an engine — the padding decision
+    must live router-side (pad once, fan out) even when every engine lives
+    in another process.
+    """
+    if not serve_cfg.shape_buckets:
+        return [serve_cfg.batch_size]
+    out, b = [], max(1, serve_cfg.bucket_min)
+    while b < serve_cfg.batch_size:
+        out.append(b)
+        b *= 2
+    out.append(serve_cfg.batch_size)
+    return out
+
+
+def bucket_for(q: int, serve_cfg: ServeConfig) -> int:
+    """Padded shape a q-row batch dispatches at under ``serve_cfg``."""
+    for b in shape_buckets(serve_cfg):
+        if q <= b:
+            return b
+    return serve_cfg.batch_size
+
+
+def validate_queries(queries, dim: int) -> np.ndarray:
+    """Normalize to (Q, dim) int32, failing *now* with a clear message.
+
+    Without this, a wrong-dim or float query is accepted silently and only
+    blows up batches later inside ``np.stack``/``np.concatenate`` (possibly
+    poisoning a batch that mixes it with valid requests).  Module-level so
+    the router can reject malformed input before it costs an RPC.
+    """
+    arr = np.atleast_2d(np.asarray(queries))
+    if arr.ndim != 2:
+        raise ValueError(
+            f"queries must be (dim,) or (Q, dim); got shape {arr.shape}")
+    if arr.shape[1] != dim:
+        raise ValueError(
+            f"query dim {arr.shape[1]} != index dim {dim} "
+            f"(shape {arr.shape})")
+    if not np.can_cast(arr.dtype, np.int32, casting="same_kind"):
+        raise TypeError(
+            f"queries must be integer-typed (castable to int32); got "
+            f"dtype {arr.dtype}")
+    return arr.astype(np.int32, copy=False)
+
+
 class AnnServingEngine:
     """Single-shard engine; the distributed variant wraps dist_query_fn."""
 
@@ -214,22 +264,12 @@ class AnnServingEngine:
 
     def buckets(self) -> List[int]:
         """Padded batch shapes the engine dispatches: pow2 up to batch_size."""
-        if not self.serve_cfg.shape_buckets:
-            return [self.serve_cfg.batch_size]
-        out, b = [], max(1, self.serve_cfg.bucket_min)
-        while b < self.serve_cfg.batch_size:
-            out.append(b)
-            b *= 2
-        out.append(self.serve_cfg.batch_size)
-        return out
+        return shape_buckets(self.serve_cfg)
 
     def bucket_for(self, q: int) -> int:
         """Padded shape a q-row batch dispatches at (router reuses this so
         its fan-out batches land on shapes every replica has compiled)."""
-        for b in self.buckets():
-            if q <= b:
-                return b
-        return self.serve_cfg.batch_size
+        return bucket_for(q, self.serve_cfg)
 
     def _index_signature(self) -> tuple:
         """Shapes the jitted query path specializes on besides the batch.
@@ -344,25 +384,8 @@ class AnnServingEngine:
     # -- query path --------------------------------------------------------
 
     def _validate_queries(self, queries) -> np.ndarray:
-        """Normalize to (Q, dim) int32, failing *now* with a clear message.
-
-        Without this, a wrong-dim or float query is accepted silently and
-        only blows up batches later inside ``np.stack``/``np.concatenate``
-        (possibly poisoning a batch that mixes it with valid requests).
-        """
-        arr = np.atleast_2d(np.asarray(queries))
-        if arr.ndim != 2:
-            raise ValueError(
-                f"queries must be (dim,) or (Q, dim); got shape {arr.shape}")
-        if arr.shape[1] != self._dim:
-            raise ValueError(
-                f"query dim {arr.shape[1]} != index dim {self._dim} "
-                f"(shape {arr.shape})")
-        if not np.can_cast(arr.dtype, np.int32, casting="same_kind"):
-            raise TypeError(
-                f"queries must be integer-typed (castable to int32); got "
-                f"dtype {arr.dtype}")
-        return arr.astype(np.int32, copy=False)
+        """Normalize to (Q, dim) int32 (module-level ``validate_queries``)."""
+        return validate_queries(queries, self._dim)
 
     def submit(self, queries: np.ndarray) -> None:
         for q in self._validate_queries(queries):

@@ -14,14 +14,19 @@ The load-bearing claims pinned here:
   * the result cache hits on repeats and is invalidated by any mutation.
 """
 import os
+import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.cluster import (ClusterConfig, ClusterRouter, ClusterUnavailable,
-                           OP_DELETE, OP_INSERT, WalRecord, WriteAheadLog)
+                           OP_DELETE, OP_INSERT, ShardReplica, WalRecord,
+                           WriteAheadLog)
+from repro.cluster.wal import _scan
 from repro.core.index import IndexConfig, build_index, query_index
 from repro.data import ann_synthetic as ds
 from repro.serve.engine import AnnServingEngine, ServeConfig
@@ -491,3 +496,204 @@ def test_wal_replay_is_deterministic_and_checked(cfg, small, tmp_path):
     with pytest.raises(ReplicaDiverged):
         rep.log_and_apply(bad)
     rep.close()
+
+
+# --------------------------------------------- WAL corruption properties
+
+
+def _build_log(path):
+    """A three-record log (insert/delete/insert) + its frame boundaries."""
+    wal = WriteAheadLog(path, fsync=False)
+    wal.append(OP_INSERT, [0, 1], np.arange(8, dtype=np.int32).reshape(2, 4))
+    wal.append(OP_DELETE, [0])
+    wal.append(OP_INSERT, [2], np.arange(4, dtype=np.int32).reshape(1, 4))
+    wal.close()
+    with open(path, "rb") as f:
+        blob = f.read()
+    return blob, [end for _, end in _scan(path)]
+
+
+def test_wal_torn_tail_truncated_at_every_byte_offset(tmp_path):
+    """Crash-at-ANY-point: for every prefix length of a multi-record log,
+    reopening yields exactly the records whose frames fit the prefix,
+    reports the dropped byte count, and appends resume on a boundary."""
+    blob, ends = _build_log(str(tmp_path / "full.log"))
+    path = str(tmp_path / "cut.log")
+    for cut in range(len(blob) + 1):
+        with open(path, "wb") as f:
+            f.write(blob[:cut])
+        wal = WriteAheadLog(path, fsync=False)
+        good = [e for e in ends if e <= cut]
+        assert [r.seq for r in wal.records()] == \
+            list(range(1, len(good) + 1)), cut
+        assert wal.torn_bytes_dropped == cut - (good[-1] if good else 0), cut
+        wal.append(OP_DELETE, [9])          # append-ready after truncation
+        assert wal.records()[-1].seq == len(good) + 1
+        wal.close()
+
+
+def test_wal_corruption_mid_log_truncates_at_last_valid(tmp_path):
+    """Flipping ANY single byte truncates at the last record before the
+    flip: replay never resyncs past garbage (CRC/magic/op checks), later
+    records are dropped with the corrupt one, and appends still work."""
+    blob, ends = _build_log(str(tmp_path / "full.log"))
+    path = str(tmp_path / "bad.log")
+    for off in range(len(blob)):
+        corrupt = bytearray(blob)
+        corrupt[off] ^= 0xFF
+        with open(path, "wb") as f:
+            f.write(bytes(corrupt))
+        wal = WriteAheadLog(path, fsync=False)
+        hit = next(i for i, e in enumerate(ends) if off < e)
+        assert [r.seq for r in wal.records()] == \
+            list(range(1, hit + 1)), off
+        assert wal.torn_bytes_dropped == \
+            len(blob) - (ends[hit - 1] if hit else 0), off
+        wal.append(OP_DELETE, [9])
+        assert len(wal.records()) == hit + 1
+        wal.close()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_wal_corruption_property(data):
+    """Random logs x random truncation/flip: survivors are always a clean
+    seq prefix and the reopened log always accepts appends."""
+    seed = data.draw(st.integers(0, 2 ** 31 - 1), label="seed")
+    n_recs = data.draw(st.integers(1, 6), label="records")
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "w.log")
+        wal = WriteAheadLog(path, fsync=False)
+        for _ in range(n_recs):
+            n = int(rng.integers(1, 5))
+            if rng.random() < 0.5:
+                wal.append(OP_INSERT, np.arange(n, dtype=np.int32),
+                           rng.integers(0, 64, (n, 4)).astype(np.int32))
+            else:
+                wal.append(OP_DELETE,
+                           rng.integers(0, 99, n).astype(np.int32))
+        wal.close()
+        with open(path, "rb") as f:
+            blob = f.read()
+        ends = [e for _, e in _scan(path)]
+        if data.draw(st.booleans(), label="truncate"):
+            cut = data.draw(st.integers(0, len(blob)), label="cut")
+            blob = blob[:cut]
+            expect = sum(1 for e in ends if e <= cut)
+        else:
+            off = data.draw(st.integers(0, len(blob) - 1), label="off")
+            b = bytearray(blob)
+            b[off] ^= 0xFF
+            blob = bytes(b)
+            expect = next(i for i, e in enumerate(ends) if off < e)
+        with open(path, "wb") as f:
+            f.write(blob)
+        wal2 = WriteAheadLog(path, fsync=False)
+        assert [r.seq for r in wal2.records()] == list(range(1, expect + 1))
+        wal2.append(OP_DELETE, [0])
+        assert len(wal2.records()) == expect + 1
+        wal2.close()
+
+
+# --------------------------------------------- snapshot cadence policy
+
+
+def _insert_rec(rep, seq, pts):
+    gids = np.arange(rep.next_gid, rep.next_gid + pts.shape[0],
+                     dtype=np.int32)
+    rep.log_and_apply(WalRecord(seq=seq, op=OP_INSERT, gids=gids,
+                                points=pts))
+
+
+def test_snapshot_cadence_bytes_bounds_recovery(cfg, small, tmp_path):
+    """``snapshot_every_bytes`` caps the WAL: the log never holds more
+    than one cadence interval of records, so kill+recover replay work is
+    bounded by policy no matter how many mutations ran (and no matter
+    that compaction never fired)."""
+    data, _ = small
+    # one 4-row insert record at dim=16: 21B header + 16B gids +
+    # 256B points + 4B crc
+    rec_bytes = 297
+    rep = ShardReplica(0, 0, cfg, serve_cfg(), KEY, str(tmp_path / "r"),
+                       data[:200], wal_fsync=False,
+                       snapshot_every_bytes=2 * rec_bytes + 1)
+    base = rep.snapshots_taken
+    rng = np.random.default_rng(7)
+    for seq in range(1, 14):
+        pts = (rng.integers(0, 32, (4, data.shape[1])) * 2).astype(np.int32)
+        _insert_rec(rep, seq, pts)
+        # every third record trips the trigger -> at most 2 at rest
+        assert rep.wal.size_bytes <= 2 * rec_bytes, seq
+    assert rep.snapshots_taken >= base + 4
+    rep.kill()
+    assert rep.recover() <= 2               # replay <= one cadence interval
+    assert rep.last_seq == 13
+    rep.close()
+
+
+def test_snapshot_cadence_time_trigger(cfg, small, tmp_path):
+    """``snapshot_every_s``: a mutation arriving after the age deadline
+    snapshots + truncates; one arriving inside it does not."""
+    data, _ = small
+    rep = ShardReplica(0, 0, cfg, serve_cfg(), KEY, str(tmp_path / "r"),
+                       data[:200], wal_fsync=False)
+    pts = data[:4].astype(np.int32)
+    _insert_rec(rep, 1, pts)                # pay the insert compile up front
+    rep.snapshot()                          # known-fresh snapshot clock
+    rep.snapshot_every_s = 0.25
+    base = rep.snapshots_taken
+    _insert_rec(rep, 2, pts + 2)            # young snapshot: no trigger
+    assert rep.snapshots_taken == base
+    assert rep.wal.size_bytes > 0
+    time.sleep(0.3)
+    _insert_rec(rep, 3, pts + 4)            # stale snapshot: trigger
+    assert rep.snapshots_taken == base + 1
+    assert rep.wal.size_bytes == 0          # truncated into the snapshot
+    rep.close()
+
+
+# ------------------------------------- hedging vs mutation quiesce (PR 4)
+
+
+def test_hedged_straggler_quiesced_before_mutation(cfg, small, tmp_path):
+    """Regression pin for the PR-4 gotcha: a hedged batch leaves the
+    straggler's future running after the fast peer's answer returns; a
+    mutation issued right then must wait it out (``_quiesce``) —
+    ``log_and_apply`` overlapping an in-flight query on the same replica
+    would race the engine's segment state."""
+    data, queries = small
+    router = make_router(cfg, data, tmp_path, hedge_ms=150,
+                         cache_capacity=0)
+    router.query(queries)                   # warm every compile path
+    victim = router.replicas[0][0]
+    state = {"in_query": 0, "overlap": False}
+    orig_query, orig_apply = victim.query, victim.log_and_apply
+
+    def slow_query(batch, n_real):
+        state["in_query"] += 1
+        try:
+            time.sleep(0.6)                 # straggle well past hedge_ms
+            return orig_query(batch, n_real)
+        finally:
+            state["in_query"] -= 1
+
+    def checked_apply(record):
+        if state["in_query"]:
+            state["overlap"] = True
+        return orig_apply(record)
+
+    victim.query = slow_query
+    victim.log_and_apply = checked_apply
+    router._rr[0] = 0                       # victim is the preferred replica
+    d, i = router.query(queries[:8] + 2)
+    assert (i >= 0).all()
+    s = router.summary()
+    assert s["hedged_batches"] >= 1 and s["hedge_wins"] >= 1, s
+    # the straggler future is STILL in flight right now; the insert must
+    # quiesce it before appending/applying anywhere
+    router.insert((queries[:4] + 5).astype(np.int32))
+    assert not state["overlap"], \
+        "mutation applied while a hedged query was still in flight"
+    victim.query, victim.log_and_apply = orig_query, orig_apply
+    router.close()

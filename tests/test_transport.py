@@ -1,0 +1,315 @@
+"""RPC transport + worker-process contracts (DESIGN.md §10).
+
+Pinned here:
+  * the length-prefixed frame codec round-trips metadata and numpy arrays
+    (both the coalesced small-frame path and the vectored large-frame
+    path) without pickle and with zero-copy receive views;
+  * malformed frames (bad magic, implausible length, truncated stream,
+    off-whitelist dtypes) surface as ``ConnectionError``/``TypeError``,
+    never as garbage arrays;
+  * worker-side exceptions cross the wire as typed errors and re-raise as
+    the matching local class (``ReplicaKilled`` et al.);
+  * a real worker subprocess serves bit-identical answers to an
+    in-process ``ShardReplica`` over the same seed/key/config, survives
+    SIGKILL via respawn + disk recovery, and the process-transport
+    ``ClusterRouter`` keeps the §7 failover/consistency discipline.
+"""
+import socket
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterConfig, ClusterRouter, OP_DELETE,
+                           OP_INSERT, RemoteReplica, ShardReplica,
+                           WalRecord)
+from repro.cluster.replica import ReplicaDiverged, ReplicaKilled
+from repro.cluster.transport import (Connection, KIND_REQUEST, KIND_RESPONSE,
+                                     RemoteError, recv_frame, send_frame)
+from repro.cluster.worker import pack_records, unpack_records
+from repro.core.index import IndexConfig, build_index, query_index
+from repro.data import ann_synthetic as ds
+from repro.serve.engine import AnnServingEngine, ServeConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return IndexConfig(num_tables=4, num_hashes=8, width=24, num_probes=20,
+                       candidate_cap=256, universe=64, k=8, rerank_chunk=128)
+
+
+@pytest.fixture(scope="module")
+def small():
+    spec = ds.DatasetSpec("transport-t", n=400, dim=16, universe=64,
+                          num_clusters=8)
+    data = np.asarray(ds.make_dataset(spec))
+    queries = np.asarray(ds.make_queries(spec, data, 16))
+    return data, queries
+
+
+def serve_cfg(**kw):
+    kw.setdefault("batch_size", 16)
+    kw.setdefault("delta_cap", 128)
+    return ServeConfig(**kw)
+
+
+# ----------------------------------------------------------- frame codec
+
+
+def _roundtrip(meta, arrays):
+    a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+    # send from a thread: a frame larger than the socketpair buffer would
+    # deadlock a synchronous send with nobody draining the other end
+    t = threading.Thread(
+        target=send_frame, args=(a, KIND_REQUEST, 7, meta, arrays))
+    t.start()
+    try:
+        kind, rid, rmeta, rarrays = recv_frame(b)
+    finally:
+        t.join()
+        a.close()
+        b.close()
+    assert (kind, rid) == (KIND_REQUEST, 7)
+    return rmeta, rarrays
+
+
+def test_frame_roundtrip_small_coalesced():
+    meta = {"method": "query", "n_real": 3, "nested": {"x": [1, 2]}}
+    arrays = [np.arange(12, dtype=np.int32).reshape(3, 4),
+              np.array([1.5, -2.5], np.float64),
+              np.zeros((0, 5), np.int64),            # empty is legal
+              np.array([True, False]),
+              np.arange(6, dtype=np.uint8)]
+    rmeta, rarrays = _roundtrip(meta, arrays)
+    assert rmeta == meta
+    assert len(rarrays) == len(arrays)
+    for sent, got in zip(arrays, rarrays):
+        assert got.dtype == sent.dtype and got.shape == sent.shape
+        np.testing.assert_array_equal(got, sent)
+
+
+def test_frame_roundtrip_large_vectored():
+    # well past _COALESCE_BYTES: exercises the vectored sendall path
+    big = np.arange(300 * 300, dtype=np.int64).reshape(300, 300)
+    rmeta, (got,) = _roundtrip({"seq": 9}, [big])
+    assert rmeta == {"seq": 9}
+    np.testing.assert_array_equal(got, big)
+
+
+def test_frame_rejects_off_whitelist_dtype():
+    a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+    try:
+        with pytest.raises(TypeError, match="whitelist"):
+            send_frame(a, KIND_REQUEST, 1, {},
+                       [np.zeros(3, np.float16)])
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_rejects_garbage_and_truncation():
+    # bad magic after a plausible length prefix
+    a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+    a.sendall(np.uint64(14).tobytes() + b"\x00" * 14)
+    with pytest.raises(ConnectionError, match="magic"):
+        recv_frame(b)
+    a.close()
+    b.close()
+
+    # implausible frame length must not trigger a giant allocation
+    a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+    a.sendall(np.uint64(1 << 60).tobytes())
+    with pytest.raises(ConnectionError, match="implausible"):
+        recv_frame(b)
+    a.close()
+    b.close()
+
+    # peer dying mid-frame surfaces as ConnectionError, not a hang
+    a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+    a.sendall(np.uint64(100).tobytes() + b"\x01" * 10)
+    a.close()
+    with pytest.raises(ConnectionError, match="mid-frame"):
+        recv_frame(b)
+    b.close()
+
+
+# ------------------------------------------------- request/response pairing
+
+
+def _serve_one(sock, reply):
+    """Minimal single-request server half for a socketpair."""
+    conn = Connection(sock)
+    rid, method, meta, arrays = conn.recv_request()
+    reply(conn, rid, method, meta, arrays)
+
+
+def test_connection_roundtrip_and_error_mapping():
+    for exc, expect in [(ReplicaKilled("gone"), ReplicaKilled),
+                        (ReplicaDiverged("fork"), ReplicaDiverged),
+                        (ValueError("bad dim"), ValueError),
+                        (ArithmeticError("weird"), RemoteError)]:
+        a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+        t = threading.Thread(
+            target=_serve_one, args=(b, lambda c, rid, *_: (
+                c.respond_error(rid, exc))))
+        t.start()
+        client = Connection(a, timeout_s=10.0)
+        with pytest.raises(expect, match=r"\[worker\]"):
+            client.request("boom")
+        t.join()
+        client.close()
+        b.close()
+
+    # happy path: meta + arrays echo back under the request's id
+    a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+    t = threading.Thread(
+        target=_serve_one, args=(b, lambda c, rid, method, meta, arrays: (
+            c.respond(rid, {"method_seen": method, **meta}, arrays))))
+    t.start()
+    client = Connection(a, timeout_s=10.0)
+    sent = np.arange(5, dtype=np.int32)
+    meta, (got,) = client.request("echo", {"x": 3}, [sent])
+    assert meta == {"method_seen": "echo", "x": 3}
+    np.testing.assert_array_equal(got, sent)
+    t.join()
+    client.close()
+    b.close()
+
+
+def test_connection_detects_mispaired_response_id():
+    a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+    t = threading.Thread(
+        target=_serve_one, args=(b, lambda c, rid, *_: (
+            send_frame(c.sock, KIND_RESPONSE, rid + 99, {}))))
+    t.start()
+    client = Connection(a, timeout_s=10.0)
+    with pytest.raises(ConnectionError, match="response id"):
+        client.request("ping")
+    t.join()
+    client.close()
+    b.close()
+
+
+def test_pack_unpack_records_roundtrip():
+    recs = [WalRecord(seq=3, op=OP_INSERT,
+                      gids=np.array([4, 5], np.int32),
+                      points=np.arange(8, dtype=np.int32).reshape(2, 4)),
+            WalRecord(seq=4, op=OP_DELETE, gids=np.array([4], np.int32))]
+    meta, arrays = pack_records(recs)
+    out = unpack_records(meta, arrays)
+    assert [(r.seq, r.op) for r in out] == [(3, OP_INSERT), (4, OP_DELETE)]
+    np.testing.assert_array_equal(out[0].gids, recs[0].gids)
+    np.testing.assert_array_equal(out[0].points, recs[0].points)
+    np.testing.assert_array_equal(out[1].gids, recs[1].gids)
+    assert out[1].points is None
+
+
+# --------------------------------------------- worker process integration
+
+
+def test_remote_replica_bit_identical_and_sigkill_recovery(
+        cfg, small, tmp_path):
+    """One worker subprocess == one in-process replica, bit for bit: same
+    answers, same mutation application, and SIGKILL + respawn recovers the
+    acknowledged state from its own snapshot + WAL."""
+    data, queries = small
+    local = ShardReplica(0, 0, cfg, serve_cfg(), KEY,
+                         str(tmp_path / "local"), data, wal_fsync=False)
+    remote = RemoteReplica(0, 0, cfg, serve_cfg(), KEY,
+                           str(tmp_path / "remote"), data, wal_fsync=False)
+    try:
+        ld, li = local.query(queries, queries.shape[0])
+        rd, ri = remote.query(queries, queries.shape[0])
+        np.testing.assert_array_equal(np.asarray(ld), np.asarray(rd))
+        np.testing.assert_array_equal(np.asarray(li), np.asarray(ri))
+
+        rec = WalRecord(seq=1, op=OP_INSERT,
+                        gids=np.arange(local.next_gid, local.next_gid + 4,
+                                       dtype=np.int32),
+                        points=(queries[:4] + 1).astype(np.int32))
+        local.log_and_apply(rec)
+        remote.log_and_apply(rec)
+        assert remote.last_seq == local.last_seq == 1
+        assert remote.next_gid == local.next_gid
+        assert remote.num_live == local.num_live
+        ld, li = local.query(queries, queries.shape[0])
+        rd, ri = remote.query(queries, queries.shape[0])
+        np.testing.assert_array_equal(np.asarray(ld), np.asarray(rd))
+        np.testing.assert_array_equal(np.asarray(li), np.asarray(ri))
+
+        # an UNANNOUNCED process death maps to the in-process failure mode
+        remote.handle.sigkill()
+        with pytest.raises(ReplicaKilled):
+            remote.query(queries, queries.shape[0])
+        assert remote.recover() >= 1        # respawn + WAL replay from disk
+        rd, ri = remote.query(queries, queries.shape[0])
+        np.testing.assert_array_equal(np.asarray(ld), np.asarray(rd))
+        np.testing.assert_array_equal(np.asarray(li), np.asarray(ri))
+
+        # typed errors cross the wire: a diverging replay is rejected
+        # remotely with the same exception class as locally (kept last:
+        # log-then-apply means the diverged record IS in the WAL, exactly
+        # as in-process — DESIGN.md §7's divergence-is-fatal contract)
+        bad = WalRecord(seq=2, op=OP_INSERT,
+                        gids=np.array([999999], np.int32),
+                        points=queries[:1].astype(np.int32))
+        with pytest.raises(ReplicaDiverged):
+            remote.log_and_apply(bad)
+    finally:
+        local.close()
+        remote.close()
+
+
+def test_process_router_matches_flat_and_survives_sigkill(
+        cfg, small, tmp_path):
+    """The §7 consistency oracle over real worker processes: S=2 x R=2
+    subprocesses answer bit-identically to the flat single-engine path,
+    an unannounced SIGKILL mid-traffic fails over with zero drops, and
+    crash-restart + peer catch-up restores full redundancy."""
+    data, queries = small
+    state = build_index(cfg, KEY, jnp.asarray(data))
+    fd, fi = map(np.asarray, query_index(cfg, state, jnp.asarray(queries)))
+
+    router = ClusterRouter(
+        cfg, serve_cfg(),
+        ClusterConfig(num_shards=2, num_replicas=2, transport="process",
+                      hedge_ms=60000, wal_fsync=False, cache_capacity=0,
+                      pipeline_depth=2),
+        data, str(tmp_path), key=KEY)
+    mirror = AnnServingEngine(cfg, serve_cfg(), dataset=jnp.asarray(data),
+                              key=KEY)
+    try:
+        cd, ci = router.query(queries)
+        np.testing.assert_array_equal(cd, fd)
+        np.testing.assert_array_equal(ci, fi)
+
+        # crash without telling the router: failover must keep identity
+        router.replicas[0][0].handle.sigkill()
+        router._rr[0] = 0                   # dead worker is the preferred
+        cd2, ci2 = router.query(queries)    # replica for the next batch
+        np.testing.assert_array_equal(cd2, fd)
+        np.testing.assert_array_equal(ci2, fi)
+        assert router.summary()["failovers"] >= 1
+
+        # mutations while a worker is dead land on the survivors' WALs
+        pts = (queries[:6] + 2).astype(np.int32)
+        np.testing.assert_array_equal(router.insert(pts), mirror.insert(pts))
+        router.delete([1, 3])
+        mirror.delete([1, 3])
+
+        # crash-restart: respawn + disk recovery + peer catch-up, then force
+        # the recovered worker to serve by killing its peer
+        info = router.recover_replica(0, 0)
+        assert info["replayed"] + info["caught_up"] >= 1
+        router.kill_replica(0, 1)
+        cd3, ci3 = router.query(queries)
+        md, mi = mirror.query_batch(queries)
+        np.testing.assert_array_equal(cd3, md)
+        np.testing.assert_array_equal(ci3, mi)
+    finally:
+        router.close()
