@@ -311,6 +311,6 @@ def query_index_compact(cfg: IndexConfig, state: IndexState,
         ctot_cap = (cfg.num_tables * cfg.probes_per_table
                     * cfg.candidate_cap)
     probe_keys, lo, occ, counts = probe_index(cfg, state, queries)
-    cb, cc, _ = pipe.pick_rung(int(counts.max()), ctot_cap, floor,
+    cb, cc, _ = pipe.pick_rung(int(counts.max()), ctot_cap, floor,  # repro: allow[r1-host-sync] THE sanctioned phase-A rung-pick read (DESIGN.md §8)
                                ctot_norm, c_cap, overflow)
     return finish_index(cfg, cb, cc, state, probe_keys, lo, occ, queries)

@@ -66,6 +66,10 @@ class Segment:
     c_norm: int = 0                   # per-bucket cap of the truncate
                                       # overflow rung (occupancy-histogram
                                       # quantile); 0 = not yet derived
+    occ_stats: Optional[dict] = None  # cached skew_summary quantiles; the
+                                      # histogram/keys are immutable once
+                                      # sealed, so one host read per segment
+                                      # lifetime instead of one per poll
 
     @property
     def size(self) -> int:
@@ -80,7 +84,8 @@ def _seg_ctot_cap(cfg: IndexConfig, state: IndexState) -> int:
     bound and the oracle cap cannot drift.  One host read of the sorted
     keys per segment seal — amortized over every query the segment serves.
     """
-    occ = pipe.max_bucket_occupancy(state.sorted_keys, state.occ_from)
+    occ = pipe.max_bucket_occupancy(  # repro: allow[r1-host-sync] seal-time cap derivation, once per segment seal
+        state.sorted_keys, state.occ_from)
     return (cfg.num_tables * cfg.probes_per_table
             * min(cfg.candidate_cap, occ))
 
@@ -370,8 +375,8 @@ class SegmentedIndex:
         for seg in self.segments:
             if seg.fingerprint != self.fingerprint:
                 raise ValueError("segment params diverged; cannot compact")
-            parts.append(np.asarray(seg.state.dataset, np.int32))
-            gid_parts.append(np.asarray(seg.gids))
+            parts.append(np.asarray(seg.state.dataset, np.int32))  # repro: allow[r1-host-sync] compaction materializes on host by design
+            gid_parts.append(np.asarray(seg.gids))  # repro: allow[r1-host-sync] compaction materializes on host by design
         if self._delta_count:
             parts.append(self._delta_points[:self._delta_count].copy())
             gid_parts.append(self._delta_gids[:self._delta_count].copy())
@@ -504,7 +509,7 @@ class SegmentedIndex:
             # legacy state (no histogram) or policy disabled: single-level
             seg.ctot_norm, seg.c_norm = seg.ctot_cap, c_full
             return
-        c_norm = max(1, min(c_full, pipe.occupancy_quantile(
+        c_norm = max(1, min(c_full, pipe.occupancy_quantile(  # repro: allow[r1-host-sync] seal-time cap derivation, once per segment
             state.occ_hist, self.cap_quantile)))
         ctot_norm = lp * c_norm
         s = min(self.cap_sample, seg.size)
@@ -512,7 +517,7 @@ class SegmentedIndex:
             stride = max(1, seg.size // s)
             sample = state.dataset[::stride][:s].astype(jnp.int32)
             _, _, occ, _ = _probe_segment(cfg, state, sample)
-            totals = np.minimum(np.asarray(occ), c_norm).sum(axis=-1)
+            totals = np.minimum(np.asarray(occ), c_norm).sum(axis=-1)  # repro: allow[r1-host-sync] seal-time occupancy sampling, once per segment
             realized = int(np.percentile(totals, 90))
             ctot_norm = min(ctot_norm,
                             1 << max(0, 2 * realized - 1).bit_length())
@@ -537,13 +542,19 @@ class SegmentedIndex:
             }
             hist = seg.state.occ_hist
             if hist is not None and seg.size:
-                entry["occ_quantiles"] = {
-                    "p50": pipe.occupancy_quantile(hist, 0.5),
-                    "p99": pipe.occupancy_quantile(hist, 0.99),
-                    "p999": pipe.occupancy_quantile(hist, 0.999),
-                    "max": pipe.max_bucket_occupancy(
-                        seg.state.sorted_keys, seg.state.occ_from),
-                }
+                if seg.occ_stats is None:
+                    # One host read per segment lifetime: the histogram and
+                    # sorted keys are immutable once sealed, so telemetry
+                    # polls reuse the cached dict instead of forcing four
+                    # device transfers per segment per poll.
+                    seg.occ_stats = {
+                        "p50": pipe.occupancy_quantile(hist, 0.5),  # repro: allow[r1-host-sync] cache fill, once per sealed segment
+                        "p99": pipe.occupancy_quantile(hist, 0.99),  # repro: allow[r1-host-sync] cache fill, once per sealed segment
+                        "p999": pipe.occupancy_quantile(hist, 0.999),  # repro: allow[r1-host-sync] cache fill, once per sealed segment
+                        "max": pipe.max_bucket_occupancy(  # repro: allow[r1-host-sync] cache fill, once per sealed segment
+                            seg.state.sorted_keys, seg.state.occ_from),
+                    }
+                entry["occ_quantiles"] = dict(seg.occ_stats)
             out.append(entry)
         return out
 
@@ -602,7 +613,7 @@ class SegmentedIndex:
             probe_keys, lo, occ, counts = _probe_segment(
                 self.cfg, seg.state, queries)
             cb, c_cap, over = pipe.pick_rung(
-                int(counts.max()), seg.ctot_cap, floor,
+                int(counts.max()), seg.ctot_cap, floor,  # repro: allow[r1-host-sync] THE sanctioned phase-A rung-pick read (DESIGN.md §8)
                 seg.ctot_norm, seg.c_norm, overflow)
             results.append(_finish_segment(
                 self.cfg, cb, c_cap, seg.state, seg.gids, tomb, probe_keys,
@@ -611,7 +622,7 @@ class SegmentedIndex:
             if stats is not None and over:
                 stats["overflow_hits"] = stats.get("overflow_hits", 0) + 1
                 if c_cap is not None:
-                    dropped = int(_truncated_total(occ, counts, c_cap, cb))
+                    dropped = int(_truncated_total(occ, counts, c_cap, cb))  # repro: allow[r1-host-sync] overflow-rung stats, rare by construction
                     stats["truncated_candidates"] = (
                         stats.get("truncated_candidates", 0) + dropped)
         if self._delta_count or not results:
