@@ -1,0 +1,23 @@
+"""Invariant lint suite + runtime race sanitizer (DESIGN.md §11).
+
+Seven PRs accumulated load-bearing invariants that existed only as prose
+in CHANGES.md gotchas: one sanctioned host-scalar read per two-phase
+query (§8), zero recompiles after warmup (§5/§8), the no-pickle wire
+dtype whitelist (§10), quiesce-before-mutation (§7), and the
+``jnp.asarray`` zero-copy aliasing trap (§3).  This package turns each
+into something a CI job can enforce:
+
+  * ``python -m repro.analysis`` — AST lint over ``src/repro/`` with five
+    rules (``rules.py``), a baseline diff gate (``engine.py``), and
+    ``# repro: allow[rule-id]`` inline suppressions;
+  * ``python -m repro.analysis --dead-code`` — import-graph reachability
+    report from the real entry points (``deadcode.py``);
+  * ``repro.analysis.racecheck`` — opt-in (``REPRO_SANITIZE=1``) runtime
+    instrumentation that wraps engine/replica entry points with
+    owner/epoch tokens and raises :class:`~repro.analysis.racecheck.
+    RaceViolation` on cross-thread query-vs-mutation overlap.
+
+Everything here is stdlib + numpy only — no jax import, so the analyzer
+runs on bare CI runners and inside pre-commit hooks.
+"""
+from .engine import Finding, Module, load_baseline, run_rules  # noqa: F401

@@ -1,0 +1,82 @@
+"""CLI for the invariant lint suite.
+
+  python -m repro.analysis                  # report findings
+  python -m repro.analysis --check          # exit 1 on non-baselined findings
+  python -m repro.analysis --write-baseline # grandfather current findings
+  python -m repro.analysis --dead-code      # reachability report (exit 0)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .engine import (default_root, diff_against_baseline, iter_source_files,
+                     load_baseline, parse_module, run_rules, write_baseline)
+from .rules import default_rules
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST invariant lint over src/repro/ (DESIGN.md §11)")
+    ap.add_argument("--root", default=None,
+                    help="package directory to scan (default: the "
+                         "installed repro package)")
+    ap.add_argument("--baseline", default="analysis_baseline.json",
+                    help="baseline file (default: ./analysis_baseline.json)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any finding is not in the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline and exit")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON")
+    ap.add_argument("--dead-code", action="store_true",
+                    help="emit the import-reachability report instead of "
+                         "lint findings (always exits 0)")
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(args.root) if args.root else default_root()
+
+    if args.dead_code:
+        from .deadcode import report_dead_code
+        print(report_dead_code(root))
+        return 0
+
+    modules = [parse_module(full, rel)
+               for full, rel in iter_source_files(root)]
+    findings = run_rules(default_rules(), modules)
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new, stale = diff_against_baseline(findings, baseline)
+
+    if args.json:
+        print(json.dumps({
+            "findings": [f.to_json() for f in findings],
+            "new": [f.to_json() for f in new],
+            "stale_baseline": sorted(list(k) for k in stale),
+        }, indent=1))
+    else:
+        for f in findings:
+            marker = "" if f.key() in baseline else " [NEW]"
+            print(f.render() + marker)
+        for key in sorted(stale):
+            print(f"stale baseline entry (no longer found): {key}")
+        print(f"{len(findings)} finding(s), {len(new)} new, "
+              f"{len(stale)} stale baseline entr(y/ies)")
+
+    if args.check and new:
+        print("FAIL: new findings not covered by the baseline; fix them or "
+              "add a justified '# repro: allow[rule-id]'", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

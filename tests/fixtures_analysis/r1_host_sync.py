@@ -1,0 +1,40 @@
+"""R1 fixture: parsed (never imported) under the pretend path
+``repro/serve/engine.py``.  Expected findings are tagged EXPECT."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline as pipe
+
+
+def bad_sync(state, queries):
+    counts = jnp.sum(queries, axis=-1)
+    n = int(counts.max())                               # EXPECT r1-host-sync
+    if counts > 0:                                      # EXPECT r1-host-sync
+        n += 1
+    q = pipe.occupancy_quantile(state.occ_hist, 0.5)    # EXPECT r1-host-sync
+    host = np.asarray(counts)                           # EXPECT r1-host-sync
+    return n, q, host
+
+
+def suppressed_sync(queries):
+    counts = jnp.sum(queries, axis=-1)
+    return int(counts.max())  # repro: allow[r1-host-sync] fixture: justified read
+
+
+def suppressed_above(queries):
+    counts = jnp.sum(queries, axis=-1)
+    # repro: allow[r1-host-sync] fixture: comment-above style
+    return float(counts.min())
+
+
+def clean(queries, warm):
+    counts = jnp.sum(queries, axis=-1)
+    k = counts.shape[0]             # shape metadata never syncs
+    if queries is None:             # identity checks are host bookkeeping
+        return None
+    if k not in warm:               # membership likewise
+        warm.add(k)
+    results = [counts, counts]
+    if not results:                 # truthiness of a host list is fine
+        return None
+    return pipe.stage_merge_pair(results[0], results[1])

@@ -1,0 +1,39 @@
+"""R2 fixture: parsed under the pretend path ``repro/serve/engine.py``."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.segments import _finish_segment
+from repro.serve.engine import bucket_for
+
+
+def bad_consumer(cfg, state, gids, tomb, probe_keys, lo, occ, queries):
+    counts = jnp.max(occ)
+    cb = int(counts.max())                                   # EXPECT r1-host-sync
+    return _finish_segment(cfg, cb, 64, state, gids, tomb,   # EXPECT r2-recompile-hazard
+                           probe_keys, lo, occ, queries)
+
+
+def bad_pad(batch, dim):
+    n = batch.shape[0]
+    return np.zeros((n, dim), np.int32)                      # EXPECT r2-recompile-hazard
+
+
+def suppressed_pad(batch, dim):
+    n = batch.shape[0]
+    return np.zeros((n, dim), np.int32)  # repro: allow[r2-recompile-hazard] fixture: justified
+
+
+def good_consumer(cfg, state, gids, tomb, probe_keys, lo, occ, queries,
+                  ladder):
+    import repro.core.pipeline as pipe
+    counts = jnp.max(occ)
+    cb, c_cap, _ = pipe.pick_rung(int(counts.max()), 512, 64, 0, 0,  # repro: allow[r1-host-sync] fixture: the sanctioned read
+                                  "escalate")
+    return _finish_segment(cfg, cb, c_cap, state, gids, tomb,
+                           probe_keys, lo, occ, queries)
+
+
+def good_pad(batch, dim):
+    n = batch.shape[0]
+    b = bucket_for(n)
+    return np.zeros((b - n, dim), np.int32)

@@ -1,0 +1,16 @@
+"""R3 fixture: parsed under the pretend path ``repro/cluster/wal.py``."""
+import pickle                                     # EXPECT r3-wire-protocol
+
+import numpy as np
+
+
+def encode(x):
+    a = np.asarray(x, np.float16)                 # EXPECT r3-wire-protocol
+    b = np.zeros((4,), dtype=np.float16)          # EXPECT r3-wire-protocol
+    ok = np.asarray(x, np.int64)
+    ok2 = np.full((2, 2), -1, np.int32)
+    return pickle.dumps((a, b, ok, ok2))
+
+
+def suppressed(x):
+    return np.asarray(x, np.float16)  # repro: allow[r3-wire-protocol] fixture: justified

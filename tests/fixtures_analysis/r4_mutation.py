@@ -1,0 +1,36 @@
+"""R4 fixture: parsed under the pretend path ``repro/cluster/router.py``."""
+from .concurrency import under_quiesce
+
+
+class Router:
+    def __init__(self):
+        self.replicas[0].recover()                     # ctor is exempt
+
+    def bad_insert(self, recs):
+        for rep in self.replicas:
+            rep.log_and_apply(recs)                    # EXPECT r4-mutation-discipline
+
+    def good_insert(self, recs):
+        self._quiesce()
+        for rep in self.replicas:
+            rep.log_and_apply(recs)
+
+    @under_quiesce
+    def _apply_all(self, recs):
+        self.replicas[0].log_and_apply(recs)
+
+    def bad_apply_caller(self, recs):
+        self._apply_all(recs)                          # EXPECT r4-mutation-discipline
+
+    def good_apply_caller(self, recs):
+        self._quiesce()
+        self._apply_all(recs)
+
+    def bad_submit(self):
+        return self._pool.submit(self.replicas[0].compact)   # EXPECT r4-mutation-discipline
+
+    def good_submit(self, rows, n):
+        return self._pool.submit(self.replicas[0].query, rows, n)
+
+    def suppressed_delete(self, recs):
+        self.replicas[0].delete(recs)  # repro: allow[r4-mutation-discipline] fixture: justified

@@ -1,0 +1,37 @@
+"""R5 fixture: parsed under the pretend path ``repro/core/segments.py``."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def bad_local(n, pts):
+    buf = np.empty((n, 4), np.int32)
+    dev = jnp.asarray(buf)                             # EXPECT r5-aliasing
+    buf[0] = pts
+    return dev
+
+
+def bad_copy_false(buf2, x):
+    dev = jnp.array(buf2, copy=False)                  # EXPECT r5-aliasing
+    buf2[1] = x
+    return dev
+
+
+def clean_mutation_before(n, dead):
+    out = np.zeros((n,), np.int32)
+    out[: len(dead)] = dead
+    return jnp.asarray(out)
+
+
+def clean_fresh_buffer(buf):
+    return jnp.asarray(buf.copy())
+
+
+class Holder:
+    def seal(self):
+        return jnp.asarray(self._delta[: self._count])  # EXPECT r5-aliasing
+
+    def insert(self, pts):
+        self._delta[0:2] = pts
+
+    def suppressed_seal(self):
+        return jnp.asarray(self._delta)  # repro: allow[r5-aliasing] fixture: justified

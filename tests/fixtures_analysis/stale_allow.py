@@ -1,0 +1,5 @@
+"""Fixture: a suppression that matches nothing must itself be reported."""
+
+
+def nothing():
+    return 1  # repro: allow[r1-host-sync] stale: there is no finding here
