@@ -49,9 +49,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Connection", "RemoteError", "KIND_REQUEST", "KIND_RESPONSE",
-           "KIND_ERROR", "send_frame", "recv_frame", "listen_unix",
-           "connect_unix", "raise_remote_error"]
+__all__ = ["Connection", "RemoteError", "WIRE_DTYPES", "KIND_REQUEST",
+           "KIND_RESPONSE", "KIND_ERROR", "send_frame", "recv_frame",
+           "listen_unix", "connect_unix", "raise_remote_error"]
 
 _MAGIC = 0x52504331                       # 'RPC1'
 _PREAMBLE = struct.Struct("<Q")           # frame_len
@@ -63,12 +63,18 @@ KIND_REQUEST = 1
 KIND_RESPONSE = 2
 KIND_ERROR = 3
 
-# the closed set of dtypes the cluster moves; a wire protocol enumerates its
-# types explicitly instead of trusting dtype strings from the peer
-_DTYPES: List[np.dtype] = [np.dtype(t) for t in (
+# The closed set of dtypes the cluster moves; a wire protocol enumerates its
+# types explicitly instead of trusting dtype strings from the peer.  This
+# tuple is the single source of truth: the codec below derives its code
+# table from it, and the static analyzer's wire-protocol rule (R3,
+# ``repro.analysis``) imports it to vet every dtype literal under
+# ``cluster/`` — the checker and the runtime cannot drift.  Codes are tuple
+# positions, so the order is part of the protocol: append only.
+WIRE_DTYPES: Tuple[np.dtype, ...] = tuple(np.dtype(t) for t in (
     np.int32, np.int64, np.uint32, np.uint64, np.float32, np.float64,
-    np.uint8, np.int8, np.int16, np.uint16, np.bool_)]
-_DTYPE_CODE: Dict[np.dtype, int] = {dt: i for i, dt in enumerate(_DTYPES)}
+    np.uint8, np.int8, np.int16, np.uint16, np.bool_))
+_DTYPES: List[np.dtype] = list(WIRE_DTYPES)
+_DTYPE_CODE: Dict[np.dtype, int] = {dt: i for i, dt in enumerate(WIRE_DTYPES)}
 
 # one frame bounded well above any legitimate payload (a full shard state
 # transfer); a corrupt length prefix must not trigger a huge allocation
@@ -183,10 +189,12 @@ def recv_frame(sock: socket.socket) -> Tuple[int, int, dict,
 def _error_classes() -> Dict[str, type]:
     # imported lazily: transport is the bottom layer and must not create an
     # import cycle with replica/router
+    from repro.analysis.racecheck import RaceViolation
     from .replica import ReplicaDiverged, ReplicaKilled
     return {
         "ReplicaKilled": ReplicaKilled,
         "ReplicaDiverged": ReplicaDiverged,
+        "RaceViolation": RaceViolation,
         "ValueError": ValueError,
         "TypeError": TypeError,
         "KeyError": KeyError,

@@ -28,7 +28,8 @@ from repro.cluster import (ClusterConfig, ClusterRouter, OP_DELETE,
                            WalRecord)
 from repro.cluster.replica import ReplicaDiverged, ReplicaKilled
 from repro.cluster.transport import (Connection, KIND_REQUEST, KIND_RESPONSE,
-                                     RemoteError, recv_frame, send_frame)
+                                     RemoteError, WIRE_DTYPES, recv_frame,
+                                     send_frame)
 from repro.cluster.worker import pack_records, unpack_records
 from repro.core.index import IndexConfig, build_index, query_index
 from repro.data import ann_synthetic as ds
@@ -110,6 +111,36 @@ def test_frame_rejects_off_whitelist_dtype():
     finally:
         a.close()
         b.close()
+
+
+def test_codec_accepts_exactly_the_wire_whitelist():
+    """The codec and ``WIRE_DTYPES`` cannot drift: every whitelisted dtype
+    round-trips, every other numpy scalar dtype is rejected at encode time,
+    and the whitelist itself is pinned (codes are tuple positions — a
+    reorder or removal is a silent protocol break)."""
+    assert WIRE_DTYPES == tuple(np.dtype(t) for t in (
+        np.int32, np.int64, np.uint32, np.uint64, np.float32, np.float64,
+        np.uint8, np.int8, np.int16, np.uint16, np.bool_))
+
+    for dt in WIRE_DTYPES:
+        arr = np.ones((3,), dt)
+        _, (got,) = _roundtrip({}, [arr])
+        assert got.dtype == dt
+        np.testing.assert_array_equal(got, arr)
+
+    # the complement: every concrete numpy scalar type NOT on the whitelist
+    # must be rejected by the encoder (never silently coerced or shipped)
+    complement = {np.dtype(t) for t in np.sctypeDict.values()
+                  if np.dtype(t).kind not in "OMm"} - set(WIRE_DTYPES)
+    assert np.dtype(np.float16) in complement          # sanity: non-empty
+    for dt in sorted(complement, key=str):
+        a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+        try:
+            with pytest.raises(TypeError, match="whitelist"):
+                send_frame(a, KIND_REQUEST, 1, {}, [np.zeros(2, dt)])
+        finally:
+            a.close()
+            b.close()
 
 
 def test_frame_rejects_garbage_and_truncation():
