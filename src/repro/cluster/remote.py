@@ -39,8 +39,10 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.analysis import racecheck
 from repro.serve import engine as serve_engine
 
+from .concurrency import under_quiesce
 from .replica import ReplicaKilled, ShardReplica
 from .transport import Connection, connect_unix
 from .worker import pack_records, unpack_records
@@ -159,6 +161,14 @@ class RemoteReplica:
         self._next_gid = 0
         self.recovered_records = 0
         self._boot()
+        # opt-in race sanitizer (REPRO_SANITIZE=1): the proxy carries its
+        # own token so a straggler RPC overlapping a mutation is caught on
+        # the router side even before the worker sees either frame
+        racecheck.maybe_instrument(
+            self, f"remote_s{shard_id}r{replica_id}",
+            queries=("query",),
+            mutations=("log_and_apply", "apply_records", "adopt_payload",
+                       "recover", "catch_up_from", "compact", "kill"))
 
     @staticmethod
     def _key_bytes(key) -> np.ndarray:
@@ -222,6 +232,7 @@ class RemoteReplica:
                               [np.ascontiguousarray(batch, np.int32)])
         return d, i
 
+    @under_quiesce
     def log_and_apply(self, record) -> int:
         if not self.alive:
             raise ReplicaKilled(
@@ -236,6 +247,7 @@ class RemoteReplica:
         meta, arrays = self._rpc("wal_records", {"after_seq": int(after_seq)})
         return unpack_records(meta, arrays)
 
+    @under_quiesce
     def apply_records(self, records) -> int:
         meta, arrays = pack_records(records)
         r, _ = self._rpc("apply_records", meta, arrays)
@@ -247,6 +259,7 @@ class RemoteReplica:
         meta, (dataset, gids) = self._rpc("export_payload")
         return dataset, gids, int(meta["next_gid"])
 
+    @under_quiesce
     def adopt_payload(self, dataset, gids, next_gid: int, seq: int) -> None:
         r, _ = self._rpc("adopt_payload",
                          {"next_gid": int(next_gid), "seq": int(seq)},
@@ -264,9 +277,11 @@ class RemoteReplica:
         r, _ = self._rpc("snapshot")
         return int(r["step"])
 
+    @under_quiesce
     def compact(self) -> None:
         self._rpc("compact")
 
+    @under_quiesce
     def kill(self) -> None:
         """SIGKILL the worker — the real process-death chaos drill (the
         in-process replica can only pretend)."""
@@ -276,6 +291,7 @@ class RemoteReplica:
             self.conn.close()
             self.conn = None
 
+    @under_quiesce
     def recover(self) -> int:
         """In-place RPC recover if the process survived, respawn + disk
         recovery if it did not; either way = snapshot restore + WAL replay

@@ -46,11 +46,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import racecheck
 from repro.ckpt import CheckpointManager
 from repro.core.index import IndexConfig, build_index
 from repro.core.segments import SegmentedIndex
 from repro.serve.engine import AnnServingEngine, ServeConfig
 
+from .concurrency import under_quiesce
 from .wal import OP_DELETE, OP_INSERT, WalRecord, WriteAheadLog
 
 __all__ = ["ShardReplica", "ReplicaKilled", "ReplicaDiverged"]
@@ -107,9 +109,17 @@ class ShardReplica:
             # directory already holds state (restart path): recover from it
             self.engine = None
             self.recovered_records = self.recover()
+        # opt-in race sanitizer (REPRO_SANITIZE=1): instrument at the END of
+        # the ctor so boot-time recover()/snapshot() stay unwrapped
+        racecheck.maybe_instrument(
+            self, f"shard{shard_id}r{replica_id}",
+            queries=("query",),
+            mutations=("log_and_apply", "apply_records", "adopt_payload",
+                       "recover", "catch_up_from", "compact", "kill"))
 
     # -- mutation log + apply ---------------------------------------------
 
+    @under_quiesce
     def log_and_apply(self, record: WalRecord) -> int:
         """WRITE-ahead: fsync the record, then apply it.  Returns removed
         count for deletes (insert returns 0)."""
@@ -119,6 +129,7 @@ class ShardReplica:
         self.wal.append_record(record)
         return self._apply(record)
 
+    @under_quiesce
     def _apply(self, record: WalRecord) -> int:
         removed = 0
         if record.op == OP_INSERT:
@@ -228,6 +239,7 @@ class ShardReplica:
         self.snapshots_taken += 1
         return self.last_seq
 
+    @under_quiesce
     def compact(self) -> None:
         """Force a major compaction and snapshot the flat result (the
         router's ``compact()`` fan-out lands here; the remote proxy ships
@@ -241,6 +253,7 @@ class ShardReplica:
         self.engine = None
         self.wal.close()
 
+    @under_quiesce
     def recover(self) -> int:
         """Snapshot restore + WAL replay; returns #records replayed.
 
@@ -290,6 +303,7 @@ class ShardReplica:
         of record-level catch-up)."""
         return self.wal.records(after_seq=after_seq)
 
+    @under_quiesce
     def apply_records(self, records) -> int:
         """Append + apply already-sequenced records from a peer (seq
         preserved); returns how many were applied."""
@@ -298,6 +312,7 @@ class ShardReplica:
             self._apply(rec)
         return len(records)
 
+    @under_quiesce
     def adopt_payload(self, dataset, gids, next_gid: int, seq: int) -> None:
         """Full state transfer: replace the engine with a peer's exported
         payload at ``seq`` and snapshot it as our own durable base.
@@ -317,6 +332,7 @@ class ShardReplica:
         self._last_snap_compactions = self.engine.index.compactions
         self.snapshot()                # own durable base at the new seq
 
+    @under_quiesce
     def catch_up_from(self, peer) -> int:
         """Close the WAL gap against a live peer; returns #records applied.
 

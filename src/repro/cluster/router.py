@@ -57,6 +57,7 @@ from repro.core import pipeline as pipe
 from repro.core.index import IndexConfig
 from repro.serve.engine import ServeConfig
 
+from .concurrency import under_quiesce
 from .replica import ReplicaKilled, ShardReplica
 from .wal import OP_DELETE, OP_INSERT, WalRecord
 
@@ -167,6 +168,7 @@ class ClusterRouter:
             "dispatch_failures": 0,
         }
 
+    @under_quiesce
     def _adopt_durable_state(self) -> None:
         """Cluster restart: adopt what the replica WALs/snapshots survived.
 
@@ -280,6 +282,7 @@ class ClusterRouter:
         self._apply_all(recs)
         return gids
 
+    @under_quiesce
     def _apply_all(self, recs: Dict[int, "WalRecord"]) -> int:
         """Apply one mutation batch's per-shard records, ALL shards, even
         past a failure.  A shard whose every replica failed gets its record
@@ -302,6 +305,7 @@ class ClusterRouter:
                 "for replay at recovery (healthy shards already applied)")
         return result
 
+    @under_quiesce
     def _apply_to_shard(self, s: int, rec: WalRecord) -> int:
         """Apply one mutation record to every live replica of shard ``s``.
 

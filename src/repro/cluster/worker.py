@@ -39,6 +39,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.racecheck import RaceViolation
+
 from .transport import Connection, listen_unix
 from .wal import OP_INSERT, WalRecord
 
@@ -191,6 +193,13 @@ class WorkerServer:
             except _Shutdown:
                 conn.respond(rid, {"ok": True})
                 raise
+            except RaceViolation as exc:
+                # the sanitizer's report is a BaseException so router-side
+                # fault tolerance can't absorb it; worker-side the single
+                # serve loop must survive to ship the error frame (the
+                # violation re-raises router-side via raise_remote_error)
+                conn.respond_error(rid, exc)
+                continue
             except Exception as exc:    # ship the failure, keep serving —
                 conn.respond_error(rid, exc)   # the router decides health
                 continue

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import shutil
 import tempfile
 
@@ -71,7 +72,16 @@ def main(argv=None):
     ap.add_argument("--pipeline-depth", type=int, default=None,
                     help="drain-pipeline depth (default: 4 with --workers, "
                          "else 1)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the drill under the race sanitizer "
+                         "(REPRO_SANITIZE=1, repro.analysis.racecheck): "
+                         "engine/replica entry points get owner/epoch "
+                         "tokens and any query-vs-mutation overlap raises")
     args = ap.parse_args(argv)
+    if args.sanitize:
+        # before router construction: instrumentation hooks fire in the
+        # replica ctors, and _worker_env() forwards the flag to workers
+        os.environ["REPRO_SANITIZE"] = "1"
 
     spec = ds.DatasetSpec("cluster", n=args.n, dim=args.dim, universe=128,
                           num_clusters=32)

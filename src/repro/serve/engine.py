@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import racecheck
 from repro.core.index import IndexConfig, IndexState
 from repro.core.segments import SegmentedIndex
 
@@ -259,6 +260,13 @@ class AnnServingEngine:
         self._warm: set = set()
         if serve_cfg.warm_buckets:
             self.warmup()
+        # opt-in race sanitizer (REPRO_SANITIZE=1): wraps the entry points
+        # with owner/epoch tokens AFTER construction so warmup and other
+        # boot-time internal calls stay unwrapped (DESIGN.md §11)
+        racecheck.maybe_instrument(
+            self, f"engine@{id(self):x}",
+            queries=("run_padded", "query_batch", "drain"),
+            mutations=("insert", "delete", "compact"))
 
     # -- shape buckets -----------------------------------------------------
 
@@ -441,7 +449,7 @@ class AnnServingEngine:
         self.stats["queries"] += n_real
         self.stats["total_ms"] += ms
         self.stats["batch_ms"].append(ms)
-        return np.asarray(d), np.asarray(i)
+        return np.asarray(d), np.asarray(i)  # repro: allow[r1-host-sync] batch-boundary result conversion after block_until_ready
 
     def run_padded(self, batch: np.ndarray, n_real: int,
                    ) -> Tuple[np.ndarray, np.ndarray]:
