@@ -1,10 +1,13 @@
 """End-to-end cluster serving walkthrough (DESIGN.md §7): a sharded,
 replicated, WAL-durable MP-RW-LSH cluster surviving a replica crash with
 zero dropped queries, recovering it from snapshot + WAL replay, and serving
-bit-identical answers throughout.
+bit-identical answers throughout — then one traced query (DESIGN.md §12)
+rendered as a Chrome trace you can open in Perfetto.
 
   PYTHONPATH=src python examples/cluster_serving.py
 """
+import json
+import os
 import shutil
 import tempfile
 
@@ -13,6 +16,8 @@ import numpy as np
 from repro.cluster import ClusterConfig, ClusterRouter
 from repro.core.index import IndexConfig
 from repro.data import ann_synthetic as ds
+from repro.obs import trace as obs_trace
+from repro.obs.render import check_spans, load_spans, to_chrome
 from repro.serve.engine import ServeConfig
 
 
@@ -71,6 +76,41 @@ def main():
     s = router.summary()
     print({k: s[k] for k in ("queries", "batches", "failovers", "recoveries",
                              "cache_hits", "replicas_marked_dead")})
+    # the same counters, as one mergeable cluster roll-up (DESIGN.md §12):
+    # per-replica registry snapshots folded order-independently, with the
+    # engine batch latency as exact-bound histogram quantiles
+    cm = s["cluster_metrics"]
+    print(f"cluster roll-up: {cm['counters']['batches']} engine batches, "
+          f"p99 batch <= {cm['histograms']['batch_ms']['p99_ms']:.2f} ms; "
+          f"router dispatch p50 <= {s['dispatch_ms']['p50_ms']:.2f} ms")
+
+    # -- traced query (DESIGN.md §12) -------------------------------------
+    # REPRO_TRACE=1 turns the span machinery on (off, every span call is a
+    # shared no-op); one cache-bypassed query then leaves its whole tree —
+    # cluster_batch -> fanout -> shard_query -> replica_query ->
+    # engine_batch -> phase_a/phase_b_rerank/merge — as JSONL in
+    # REPRO_TRACE_DIR, rendered here into Chrome trace-event JSON.
+    trace_dir = os.path.join(root, "trace")
+    os.environ["REPRO_TRACE"] = "1"
+    os.environ["REPRO_TRACE_DIR"] = trace_dir
+    try:
+        router.clear_cache()
+        router.query(queries[:32])
+    finally:
+        del os.environ["REPRO_TRACE"]
+    obs_trace.flush()
+    spans = load_spans(trace_dir)
+    report = check_spans(spans)
+    out_path = os.path.join(trace_dir, "trace.json")
+    with open(out_path, "w", encoding="utf-8") as f:
+        json.dump(to_chrome(spans), f)
+    slowest = max((r for r in spans if r["name"] == "replica_query"),
+                  key=lambda r: r["dur"], default=None)
+    print(f"traced query: {report['records']} spans on "
+          f"{report['traces']} trace(s), schema ok={report['ok']}; "
+          f"slowest replica_query {slowest['dur'] / 1000:.2f} ms "
+          f"(shard {slowest['args']['shard']})")
+    print(f"open {out_path} in https://ui.perfetto.dev to see the tree")
     router.close()
     shutil.rmtree(root, ignore_errors=True)
 

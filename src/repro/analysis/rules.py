@@ -76,12 +76,18 @@ def _line_findings_key(node: ast.AST) -> Tuple[int, int]:
 class HostSyncRule(Rule):
     """Flag host-scalar reads and device-value branching in hot paths.
 
-    Scope: the staged pipeline, the segmented index, the kernels, and the
-    serving engine — the modules where an unplanned ``.item()`` /
-    ``int()`` / ``np.asarray`` on a traced value stalls the device
-    pipeline per batch.  The sanctioned reads (the §8 phase-A rung pick,
-    seal-time cap derivation, compaction's host materialization, the
-    batch-boundary result conversion) carry inline allows with their
+    Scope: the staged pipeline, the segmented index, the kernels, the
+    serving engine, and the ``repro.obs`` hot-path helpers — the modules
+    where an unplanned ``.item()`` / ``int()`` / ``np.asarray`` on a
+    traced value stalls the device pipeline per batch.  ``repro/obs/`` is
+    in scope because its primitives (``span``, ``record_ms``, the
+    registry facade) run inside every batch: the package is stdlib-only
+    by design, so a device read sneaking in there should fail the gate,
+    not hide behind "it's just telemetry".  The sanctioned reads (the §8
+    phase-A rung pick, seal-time cap derivation, compaction's host
+    materialization, the batch-boundary result conversion, and the flight
+    recorder's slow-exemplar preview — batch-boundary, post
+    ``block_until_ready``, slow path only) carry inline allows with their
     justification.
     """
 
@@ -90,7 +96,7 @@ class HostSyncRule(Rule):
 
     SCOPE = ("repro/core/pipeline.py", "repro/core/segments.py",
              "repro/core/index.py", "repro/serve/engine.py",
-             "repro/kernels/")
+             "repro/kernels/", "repro/obs/")
 
     def applies(self, path: str) -> bool:
         return path.startswith(self.SCOPE)

@@ -40,11 +40,12 @@ from typing import List, Optional
 import numpy as np
 
 from repro.analysis import racecheck
+from repro.obs import trace as obs_trace
 from repro.serve import engine as serve_engine
 
 from .concurrency import under_quiesce
 from .replica import ReplicaKilled, ShardReplica
-from .transport import Connection, connect_unix
+from .transport import TRACE_META_KEY, Connection, connect_unix
 from .worker import pack_records, unpack_records
 
 __all__ = ["RemoteReplica", "WorkerHandle", "spawn_replica_grid"]
@@ -228,7 +229,13 @@ class RemoteReplica:
         if not self.alive:
             raise ReplicaKilled(
                 f"shard {self.shard_id} replica {self.replica_id} is down")
-        _, (d, i) = self._rpc("query", {"n_real": int(n_real)},
+        meta: dict = {"n_real": int(n_real)}
+        # trace context rides the JSON meta (scalars only — no wire-protocol
+        # dtype changes); the worker re-parents its spans under it
+        ctx = obs_trace.wire_context()
+        if ctx is not None:
+            meta[TRACE_META_KEY] = ctx
+        _, (d, i) = self._rpc("query", meta,
                               [np.ascontiguousarray(batch, np.int32)])
         return d, i
 

@@ -391,6 +391,13 @@ class ShardReplica:
             "overflow_hits": eng.stats["overflow_hits"],
             "truncated_candidates": eng.stats["truncated_candidates"],
             "skew_segments": eng.index.skew_summary(),
+            # full registry snapshot (mergeable: the router folds one per
+            # replica into the cluster view) + the flight recorder's
+            # slow-batch exemplars — both JSON-able, so the process
+            # transport carries them in the RPC meta unchanged
+            "metrics": eng.metrics.snapshot(),
+            "flight": {**eng.flight.summary(),
+                       "exemplars": eng.flight.exemplars()},
         }
 
     def close(self) -> None:

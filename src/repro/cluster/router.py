@@ -55,6 +55,9 @@ import numpy as np
 
 from repro.core import pipeline as pipe
 from repro.core.index import IndexConfig
+from repro.obs import FlightRecorder, MetricsRegistry
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.engine import ServeConfig
 
 from .concurrency import under_quiesce
@@ -138,7 +141,9 @@ class ClusterRouter:
         self._shard_seq = [0] * S
         self._adopt_durable_state()
         self._rr = [0] * S             # per-shard preferred-replica rotation
-        self._queue: List[Tuple[np.ndarray, Optional[float]]] = []
+        # (row, deadline, enqueue_perf_s): the third field feeds the
+        # per-batch queue_wait span at dispatch time
+        self._queue: List[Tuple[np.ndarray, Optional[float], float]] = []
         self._cache: "collections.OrderedDict[bytes, tuple]" = \
             collections.OrderedDict()
         self._fail_counts: Dict[Tuple[int, int], int] = {}
@@ -159,14 +164,24 @@ class ClusterRouter:
         # (a lost update would flake the CI acceptance asserts on hedge
         # and failover counters)
         self._stats_lock = threading.Lock()
-        self.stats = {
-            "queries": 0, "batches": 0, "served": 0,
-            "hedged_batches": 0, "hedge_wins": 0, "failovers": 0,
-            "rejected_queue_full": 0, "rejected_deadline": 0,
-            "cache_hits": 0, "cache_misses": 0,
-            "replicas_marked_dead": 0, "recoveries": 0,
-            "dispatch_failures": 0,
-        }
+        # registry-backed stats (DESIGN.md §12): the registry's dict-style
+        # facade keeps every _bump/"stats[...]" site unchanged while the
+        # counters become part of the mergeable-snapshot API; the
+        # dispatch-latency histogram rides in the same registry
+        self.metrics = MetricsRegistry("router")
+        self.stats = self.metrics
+        for k in ("queries", "batches", "served",
+                  "hedged_batches", "hedge_wins", "failovers",
+                  "rejected_queue_full", "rejected_deadline",
+                  "cache_hits", "cache_misses",
+                  "replicas_marked_dead", "recoveries",
+                  "dispatch_failures"):
+            self.stats[k] = 0
+        self._dispatch_lat = self.metrics.histogram("dispatch_ms")
+        # dispatch-granularity flight recorder: fan-out/hedge timing; the
+        # rung/cbucket decisions live in each engine's recorder (telemetry)
+        self.flight = FlightRecorder(slow_ms=ccfg.hedge_ms)
+        obs_trace.set_process_label("router")
 
     @under_quiesce
     def _adopt_durable_state(self) -> None:
@@ -426,8 +441,12 @@ class ClusterRouter:
         self.stats["rejected_queue_full"] += q.shape[0] - admit
         deadline = (time.monotonic() + deadline_ms / 1e3
                     if deadline_ms is not None else None)
+        t_enq = time.perf_counter()
         for row in q[:admit]:
-            self._queue.append((row, deadline))
+            self._queue.append((row, deadline, t_enq))
+        obs_trace.event("admission", admitted=int(admit),
+                        rejected=int(q.shape[0] - admit),
+                        queue_depth=len(self._queue))
         return admit
 
     def drain(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -483,20 +502,34 @@ class ClusterRouter:
             todo_pos: List[int] = []
             todo_rows: List[np.ndarray] = []
             sig = self._signature()
-            for pos, (row, deadline) in enumerate(take):
-                if deadline is not None and now > deadline:
-                    self.stats["rejected_deadline"] += 1
-                    continue
-                hit = self._cache_get(row.tobytes(), sig)
-                if hit is not None:
-                    d[pos], i[pos] = hit
-                    self.stats["cache_hits"] += 1
-                    self.stats["served"] += 1
-                else:
-                    todo_pos.append(pos)
-                    todo_rows.append(row)
-            fut = (self._pool.submit(self._dispatch, np.stack(todo_rows))
-                   if todo_rows else None)
+            # the trace root for the whole batch is born HERE — spans opened
+            # on pool threads / workers chain off it via explicit (tid, sid)
+            # hand-off (thread-locals do not follow _pool.submit)
+            with obs_trace.span("cluster_batch", rows=len(take)):
+                oldest = min(t for _, _, t in take)
+                obs_trace.record_span(
+                    "queue_wait",
+                    dur_ms=(time.perf_counter() - oldest) * 1e3,
+                    rows=len(take))
+                hits = 0
+                for pos, (row, deadline, _t_enq) in enumerate(take):
+                    if deadline is not None and now > deadline:
+                        self.stats["rejected_deadline"] += 1
+                        continue
+                    hit = self._cache_get(row.tobytes(), sig)
+                    if hit is not None:
+                        d[pos], i[pos] = hit
+                        self.stats["cache_hits"] += 1
+                        self.stats["served"] += 1
+                        hits += 1
+                    else:
+                        todo_pos.append(pos)
+                        todo_rows.append(row)
+                obs_trace.event("cache", hits=hits, misses=len(todo_rows))
+                ctx = obs_trace.current()
+                fut = (self._pool.submit(self._dispatch,
+                                         np.stack(todo_rows), ctx)
+                       if todo_rows else None)
             inflight.append((d, i, todo_pos, todo_rows, sig, fut))
             if len(inflight) >= depth:
                 resolve(inflight.popleft())
@@ -530,7 +563,8 @@ class ClusterRouter:
                 "(rows marked -1; see stats['dispatch_failures'])")
         return out
 
-    def _dispatch(self, rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def _dispatch(self, rows: np.ndarray, ctx=None,
+                  ) -> Tuple[np.ndarray, np.ndarray]:
         """Fan one batch out to every shard and fold the top-k lists."""
         n = rows.shape[0]
         bucket = self._any_alive_replica().bucket_for(n)
@@ -541,20 +575,31 @@ class ClusterRouter:
         # counters must go through the lock
         self._bump("batches")
         self._bump("queries", n)
-        # genuine fan-out: all shards in flight at once, so batch latency is
-        # ~max(per-shard) not sum, and one shard's hedge wait does not stall
-        # the others' dispatch
-        shard_futs = [self._pool.submit(self._query_shard, s, rows, n)
-                      for s in range(self.num_shards)]
-        try:
-            return self._fold_shards(shard_futs, n)
-        except BaseException:
-            # one shard failed: the sibling fan-out tasks are still running
-            # and are NOT in _inflight (only their replica futures are,
-            # and possibly not yet) — wait them out so a caller's follow-up
-            # mutation cannot race an in-flight query
-            cf.wait(shard_futs)
-            raise
+        t0 = time.perf_counter()
+        with obs_trace.span("fanout", parent=ctx,
+                            shards=self.num_shards, n_real=n):
+            fan_ctx = obs_trace.current() or ctx
+            # genuine fan-out: all shards in flight at once, so batch
+            # latency is ~max(per-shard) not sum, and one shard's hedge
+            # wait does not stall the others' dispatch
+            shard_futs = [
+                self._pool.submit(self._query_shard, s, rows, n, fan_ctx)
+                for s in range(self.num_shards)]
+            try:
+                with obs_trace.span("merge", shards=self.num_shards):
+                    out = self._fold_shards(shard_futs, n)
+            except BaseException:
+                # one shard failed: the sibling fan-out tasks are still
+                # running and are NOT in _inflight (only their replica
+                # futures are, and possibly not yet) — wait them out so a
+                # caller's follow-up mutation cannot race an in-flight query
+                cf.wait(shard_futs)
+                raise
+        ms = (time.perf_counter() - t0) * 1e3
+        with self._stats_lock:
+            self._dispatch_lat.record_ms(ms)
+        self.flight.record(ms, {"n_real": n, "shards": self.num_shards})
+        return out
 
     def _fold_shards(self, shard_futs, n: int,
                      ) -> Tuple[np.ndarray, np.ndarray]:
@@ -573,7 +618,22 @@ class ClusterRouter:
                     merged_d, merged_i, gd, gi)
         return np.asarray(merged_d)[:n], np.asarray(merged_i)[:n]
 
-    def _query_shard(self, s: int, padded: np.ndarray, n_real: int):
+    def _traced_query(self, rep: ShardReplica, padded: np.ndarray,
+                      n_real: int, ctx, role: str):
+        """One replica query wrapped in a ``replica_query`` span.
+
+        Runs ON the pool thread that serves the future, so the span's
+        duration is the replica's wall time as the router experienced it
+        (RPC + engine); ``role`` distinguishes the hedge primary from the
+        re-issue so the winner AND the loser are visible in the trace.
+        """
+        with obs_trace.span("replica_query", parent=ctx,
+                            shard=rep.shard_id, replica=rep.replica_id,
+                            hedge=role):
+            return rep.query(padded, n_real)
+
+    def _query_shard(self, s: int, padded: np.ndarray, n_real: int,
+                     ctx=None):
         """One shard's answer, with failover and hedged re-issue.
 
         The preferred replica rotates per batch.  A fast failure fails over
@@ -589,46 +649,54 @@ class ClusterRouter:
         self._rr[s] += 1
         order = order[start:] + order[:start]
         primary = order[0]
-        fut = self._pool.submit(primary.query, padded, n_real)
-        self._track(fut)
-        try:
-            res = fut.result(timeout=self.ccfg.hedge_ms / 1e3)
-            self._health_ok(primary)
-            return res
-        except cf.TimeoutError:
-            if len(order) == 1:
-                # nobody to hedge to: wait it out (NOT counted as a hedged
-                # re-issue — none happened); a failure here must surface as
-                # ClusterUnavailable so drain()'s degrade-in-place handler
-                # keeps the queue aligned
-                try:
-                    res = fut.result()
-                    self._health_ok(primary)
-                    return res
-                except Exception as err:
-                    self._health_fail(primary)
-                    raise ClusterUnavailable(
-                        f"shard {s}: sole replica failed after deadline"
-                    ) from err
-            self._bump("hedged_batches")
-            peer = order[1]
-            fut2 = self._pool.submit(peer.query, padded, n_real)
-            self._track(fut2)
-            return self._first_complete(
-                s, [(fut, primary), (fut2, peer)], primary)
-        except Exception as err:  # fast failure (ReplicaKilled, …): fail over
-            self._health_fail(primary)
-            self._bump("failovers")
-            for peer in order[1:]:
-                try:
-                    res = peer.query(padded, n_real)
-                    self._health_ok(peer)
-                    return res
-                except Exception as e2:
-                    self._health_fail(peer)
-                    err = e2
-            raise ClusterUnavailable(
-                f"shard {s}: all replicas failed") from err
+        with obs_trace.span("shard_query", parent=ctx, shard=s) as sp:
+            ctx = obs_trace.current() or ctx
+            fut = self._pool.submit(self._traced_query, primary, padded,
+                                    n_real, ctx, "primary")
+            self._track(fut)
+            try:
+                res = fut.result(timeout=self.ccfg.hedge_ms / 1e3)
+                self._health_ok(primary)
+                return res
+            except cf.TimeoutError:
+                if len(order) == 1:
+                    # nobody to hedge to: wait it out (NOT counted as a
+                    # hedged re-issue — none happened); a failure here must
+                    # surface as ClusterUnavailable so drain()'s
+                    # degrade-in-place handler keeps the queue aligned
+                    try:
+                        res = fut.result()
+                        self._health_ok(primary)
+                        return res
+                    except Exception as err:
+                        self._health_fail(primary)
+                        raise ClusterUnavailable(
+                            f"shard {s}: sole replica failed after deadline"
+                        ) from err
+                self._bump("hedged_batches")
+                sp.set(hedged=True)
+                peer = order[1]
+                fut2 = self._pool.submit(self._traced_query, peer, padded,
+                                         n_real, ctx, "reissue")
+                self._track(fut2)
+                return self._first_complete(
+                    s, [(fut, primary), (fut2, peer)], primary)
+            except Exception as err:  # fast failure (ReplicaKilled, …):
+                self._health_fail(primary)       # fail over synchronously
+                self._bump("failovers")
+                obs_trace.event("failover", shard=s,
+                                from_replica=primary.replica_id)
+                for peer in order[1:]:
+                    try:
+                        res = self._traced_query(peer, padded, n_real,
+                                                 ctx, "failover")
+                        self._health_ok(peer)
+                        return res
+                    except Exception as e2:
+                        self._health_fail(peer)
+                        err = e2
+                raise ClusterUnavailable(
+                    f"shard {s}: all replicas failed") from err
 
     def _first_complete(self, s: int, racers, primary):
         """Wait for the first *successful* racer; losers keep running and
@@ -649,6 +717,9 @@ class ClusterRouter:
                 self._health_ok(rep)
                 if rep is not primary:
                     self._bump("hedge_wins")
+                obs_trace.event("hedge_win", shard=s,
+                                replica=rep.replica_id,
+                                hedged=rep is not primary)
                 return res
         raise ClusterUnavailable(
             f"shard {s}: all hedged replicas failed") from last_err
@@ -683,6 +754,10 @@ class ClusterRouter:
 
     def summary(self) -> dict:
         shards = []
+        # one mergeable roll-up across every live engine: merge is
+        # commutative+associative (tests pin it), so shard/replica order
+        # cannot change the cluster-wide counters or histogram buckets
+        cluster_snap: Optional[dict] = None
         for s, group in enumerate(self.replicas):
             reps = []
             for rep in group:
@@ -698,6 +773,11 @@ class ClusterRouter:
                     t = rep.telemetry() if rep.alive else {}
                 except ReplicaKilled:
                     t = {}
+                snap = t.get("metrics")
+                if snap:
+                    cluster_snap = (snap if cluster_snap is None
+                                    else obs_metrics.merge_snapshots(
+                                        cluster_snap, snap))
                 reps.append({
                     "replica": rep.replica_id,
                     "alive": rep.alive,
@@ -710,6 +790,7 @@ class ClusterRouter:
                     "overflow_hits": t.get("overflow_hits"),
                     "truncated_candidates": t.get("truncated_candidates"),
                     "skew_segments": t.get("skew_segments"),
+                    "flight": t.get("flight"),
                 })
             shards.append({
                 "shard": s,
@@ -717,7 +798,12 @@ class ClusterRouter:
                 "replicas": reps,
             })
         return {
-            **self.stats,
+            **self.metrics.as_dict(),
+            "dispatch_ms": obs_metrics.summarize_snapshot(
+                self.metrics.snapshot())["histograms"].get("dispatch_ms"),
+            "cluster_metrics": (obs_metrics.summarize_snapshot(cluster_snap)
+                                if cluster_snap else None),
+            "flight": self.flight.summary(),
             "num_shards": self.ccfg.num_shards,
             "num_replicas": self.ccfg.num_replicas,
             "next_gid": self.next_gid,

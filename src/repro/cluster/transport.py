@@ -49,9 +49,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Connection", "RemoteError", "WIRE_DTYPES", "KIND_REQUEST",
-           "KIND_RESPONSE", "KIND_ERROR", "send_frame", "recv_frame",
-           "listen_unix", "connect_unix", "raise_remote_error"]
+__all__ = ["Connection", "RemoteError", "WIRE_DTYPES", "TRACE_META_KEY",
+           "KIND_REQUEST", "KIND_RESPONSE", "KIND_ERROR", "send_frame",
+           "recv_frame", "listen_unix", "connect_unix", "raise_remote_error"]
+
+# Distributed tracing (DESIGN.md §12) rides the JSON meta under this key as
+# {"tid": <hex trace id>, "sid": <int span id>} — scalars in the existing
+# header, so trace propagation changes NOTHING about the wire protocol: no
+# new frame kind, no new dtype code, no array payload.  Absent when tracing
+# is off (the common case costs zero header bytes).
+TRACE_META_KEY = "trace"
 
 _MAGIC = 0x52504331                       # 'RPC1'
 _PREAMBLE = struct.Struct("<Q")           # frame_len

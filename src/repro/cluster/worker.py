@@ -40,8 +40,9 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.analysis.racecheck import RaceViolation
+from repro.obs import trace as obs_trace
 
-from .transport import Connection, listen_unix
+from .transport import TRACE_META_KEY, Connection, listen_unix
 from .wal import OP_INSERT, WalRecord
 
 __all__ = ["main", "pack_records", "unpack_records"]
@@ -94,6 +95,10 @@ class WorkerServer:
         from repro.serve.engine import ServeConfig
         from .replica import ShardReplica
 
+        # label first: replica construction runs engine warmup batches,
+        # and their spans must land in this worker's trace file
+        obs_trace.set_process_label(
+            f"worker-s{int(meta['shard_id'])}r{int(meta['replica_id'])}")
         key_data, seed = arrays
         key = jnp.asarray(np.ascontiguousarray(key_data, np.uint32))
         self.replica = ShardReplica(
@@ -111,8 +116,15 @@ class WorkerServer:
                 "pid": os.getpid()}, ()
 
     def _handle_query(self, meta, arrays):
-        d, i = self.replica.query(np.ascontiguousarray(arrays[0], np.int32),
-                                  int(meta["n_real"]))
+        # re-parent under the router's span: the (tid, sid) pair from the
+        # JSON meta joins this process's spans to the cross-process trace
+        ctx = meta.get(TRACE_META_KEY)
+        parent = (ctx["tid"], int(ctx["sid"])) if ctx else None
+        with obs_trace.span("worker_query", parent=parent,
+                            n_real=int(meta["n_real"])):
+            d, i = self.replica.query(
+                np.ascontiguousarray(arrays[0], np.int32),
+                int(meta["n_real"]))
         return {}, (np.asarray(d, np.int32), np.asarray(i, np.int32))
 
     def _handle_log_and_apply(self, meta, arrays):

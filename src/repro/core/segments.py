@@ -42,6 +42,7 @@ from . import hashes as hashes_lib
 from . import pipeline as pipe
 from .index import (IndexConfig, IndexState, build_index, make_params,
                     make_template, probe_index)
+from repro.obs import trace as obs_trace
 
 __all__ = ["Segment", "SegmentedIndex"]
 
@@ -602,6 +603,12 @@ class SegmentedIndex:
         queries = jnp.asarray(queries)
         tomb = self._tombstone_array()
         results, used = [], []
+        # tracing note (DESIGN.md §12): with REPRO_TRACE=1 each phase
+        # blocks at its span boundary so the recorded durations attribute
+        # real device time to phase A vs phase B instead of measuring
+        # async dispatch; tracing OFF leaves the pipelining untouched
+        # (span() is a shared no-op and no extra sync happens).
+        traced = obs_trace.enabled()
         for seg in self.segments:
             if seg.size == 0:
                 # no probe front-end to compact; the stock path already
@@ -610,14 +617,21 @@ class SegmentedIndex:
                     self.cfg, seg.state, seg.gids, tomb, queries))
                 continue
             self._ensure_caps(seg)
-            probe_keys, lo, occ, counts = _probe_segment(
-                self.cfg, seg.state, queries)
-            cb, c_cap, over = pipe.pick_rung(
-                int(counts.max()), seg.ctot_cap, floor,  # repro: allow[r1-host-sync] THE sanctioned phase-A rung-pick read (DESIGN.md §8)
-                seg.ctot_norm, seg.c_norm, overflow)
-            results.append(_finish_segment(
-                self.cfg, cb, c_cap, seg.state, seg.gids, tomb, probe_keys,
-                lo, occ, queries))
+            with obs_trace.span("phase_a", segment=int(seg.size)):
+                probe_keys, lo, occ, counts = _probe_segment(
+                    self.cfg, seg.state, queries)
+                cb, c_cap, over = pipe.pick_rung(
+                    int(counts.max()), seg.ctot_cap, floor,  # repro: allow[r1-host-sync] THE sanctioned phase-A rung-pick read (DESIGN.md §8)
+                    seg.ctot_norm, seg.c_norm, overflow)
+            with obs_trace.span("phase_b_rerank", segment=int(seg.size),
+                                cbucket=int(cb),
+                                c_cap=None if c_cap is None else int(c_cap)):
+                res = _finish_segment(
+                    self.cfg, cb, c_cap, seg.state, seg.gids, tomb,
+                    probe_keys, lo, occ, queries)
+                if traced:
+                    res[0].block_until_ready()
+            results.append(res)
             used.append((seg.size, cb, c_cap))
             if stats is not None and over:
                 stats["overflow_hits"] = stats.get("overflow_hits", 0) + 1
@@ -626,14 +640,18 @@ class SegmentedIndex:
                     stats["truncated_candidates"] = (
                         stats.get("truncated_candidates", 0) + dropped)
         if self._delta_count or not results:
-            delta_pts, delta_gids = self._delta_arrays()
-            results.append(_query_delta(
-                self.cfg, delta_pts, delta_gids,
-                jnp.int32(self._delta_count), tomb, queries))
-        d, i = results[0]
-        for dn, in_ in results[1:]:
-            d, i = pipe.stage_merge_pair(d, i, dn, in_,
-                                         use_kernel=use_merge_kernel)
+            with obs_trace.span("delta_scan", fill=int(self._delta_count)):
+                delta_pts, delta_gids = self._delta_arrays()
+                results.append(_query_delta(
+                    self.cfg, delta_pts, delta_gids,
+                    jnp.int32(self._delta_count), tomb, queries))
+        with obs_trace.span("merge", parts=len(results)):
+            d, i = results[0]
+            for dn, in_ in results[1:]:
+                d, i = pipe.stage_merge_pair(d, i, dn, in_,
+                                             use_kernel=use_merge_kernel)
+            if traced:
+                d.block_until_ready()
         return d, i, tuple(used)
 
     def warm_compact(self, queries: jax.Array, floor: int = 64,

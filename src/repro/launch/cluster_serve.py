@@ -77,11 +77,31 @@ def main(argv=None):
                          "(REPRO_SANITIZE=1, repro.analysis.racecheck): "
                          "engine/replica entry points get owner/epoch "
                          "tokens and any query-vs-mutation overlap raises")
+    ap.add_argument("--trace", action="store_true",
+                    help="run under distributed tracing (REPRO_TRACE=1, "
+                         "repro.obs.trace): router + worker spans land as "
+                         "JSONL in --trace-dir; render with "
+                         "`python -m repro.obs render <dir>`")
+    ap.add_argument("--trace-dir", default=None,
+                    help="span output directory (default: "
+                         "$REPRO_TRACE_DIR or ./repro_trace)")
+    ap.add_argument("--hedge-drill", action="store_true",
+                    help="slow every shard-0 replica past --hedge-ms for "
+                         "one batch so a hedged re-issue (winner AND "
+                         "loser) provably happens — the obs smoke's "
+                         "trace fixture")
     args = ap.parse_args(argv)
     if args.sanitize:
         # before router construction: instrumentation hooks fire in the
         # replica ctors, and _worker_env() forwards the flag to workers
         os.environ["REPRO_SANITIZE"] = "1"
+    if args.trace_dir is not None:
+        # absolute: the router and the worker subprocesses (who inherit
+        # the env but not the cwd contract) must agree on the directory
+        os.environ["REPRO_TRACE_DIR"] = os.path.abspath(args.trace_dir)
+    if args.trace:
+        # before router construction, for the same reason as --sanitize
+        os.environ["REPRO_TRACE"] = "1"
 
     spec = ds.DatasetSpec("cluster", n=args.n, dim=args.dim, universe=128,
                           num_clusters=32)
@@ -109,6 +129,30 @@ def main(argv=None):
            "transport": transport, "shards": shards,
            "pipeline_depth": depth}
 
+    if args.hedge_drill:
+        if args.replicas < 2:
+            raise SystemExit("--hedge-drill needs --replicas >= 2 "
+                             "(hedging re-issues to a peer)")
+        # slow EVERY shard-0 replica: the preferred replica rotates per
+        # batch, so slowing just one would let the rotation dodge the drill;
+        # the re-issued peer is equally slow, which is fine — the race still
+        # happens and the first complete result still wins
+        before_h = int(router.stats["hedged_batches"])
+        before_w = int(router.stats["hedge_wins"])
+        for rep in router.replicas[0]:
+            rep.slow_ms = args.hedge_ms * 3
+        try:
+            router.clear_cache()                           # real dispatches
+            dh, ih = router.query(queries[: args.batch])
+        finally:
+            for rep in router.replicas[0]:
+                rep.slow_ms = 0.0
+        out["hedge_drill"] = {
+            "hedged_batches": int(router.stats["hedged_batches"]) - before_h,
+            "hedge_wins": int(router.stats["hedge_wins"]) - before_w,
+            "identical": bool(np.array_equal(ih, i[: dh.shape[0]])),
+        }
+
     if args.chaos:
         if transport == "process":
             # the real drill: SIGKILL the worker process, unannounced
@@ -131,6 +175,10 @@ def main(argv=None):
 
     out.update(router.summary())
     out.pop("shards", None)
+    if os.environ.get("REPRO_TRACE") == "1":
+        from repro.obs import trace as obs_trace
+        obs_trace.flush()
+        out["trace_dir"] = obs_trace.trace_dir()
     print(json.dumps(out, indent=1))
     router.close()
     if args.root is None:

@@ -141,15 +141,15 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
                 "reason": "full-attention arch; long_500k requires sub-quadratic"}
     mesh = make_production_mesh(multi_pod=multi_pod)
     spec = input_specs(cfg, shape_name, mesh)
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         shardings = jax.tree.map(
             lambda s: NamedSharding(mesh, s), spec["in_shardings"],
             is_leaf=lambda x: isinstance(x, P))
         lowered = jax.jit(spec["fn"], in_shardings=shardings).lower(*spec["args"])
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
         roof = rl.analyze(compiled)
     mf = rl.model_flops(cfg, spec["tokens"],
                         "train" if spec["kind"] == "train" else "fwd")
@@ -214,7 +214,7 @@ def lower_ann_cell(multi_pod: bool = False, n_global: int = 1 << 27,
     sspec = di.state_specs(mesh, cfg)
     qspec = P("model", None)
     query = di.dist_query_fn(cfg, mesh, merge=merge)
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
                                  (sspec, qspec), is_leaf=lambda x: isinstance(x, P))
@@ -225,7 +225,7 @@ def lower_ann_cell(multi_pod: bool = False, n_global: int = 1 << 27,
         "arch": f"mp-rw-lsh-index(n={n_global},m={dim},merge={merge},dt={dataset_dtype})",
         "shape": f"query_q{q_global}_k{cfg.k}",
         "mesh": "2x16x16" if multi_pod else "16x16",
-        "status": "ok", "t_total_s": round(time.time() - t0, 1),
+        "status": "ok", "t_total_s": round(time.perf_counter() - t0, 1),
         **roof.summary(),
     }
 

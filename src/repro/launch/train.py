@@ -61,7 +61,7 @@ def main(argv=None):
             print(f"resumed from step {start}")
 
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start, args.steps):
         tokens, labels = batch_at_step(data_cfg, step)
         batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
@@ -71,7 +71,7 @@ def main(argv=None):
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         losses.append(float(metrics["loss"]))
         if step % args.log_every == 0 or step == args.steps - 1:
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             print(f"step {step:5d} loss {losses[-1]:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
                   f"({dt / max(step - start + 1, 1):.2f}s/step)")

@@ -1,0 +1,20 @@
+"""repro.obs — observability for the serving stack (DESIGN.md §12).
+
+Three pieces, one package, stdlib-only (safe to import from the worker
+boot path, the analyzer, and anywhere else that must not pay for jax):
+
+  * :mod:`repro.obs.metrics` — typed metrics registry (counters, gauges,
+    families, log₂-bucketed histograms) with mergeable JSON snapshots;
+  * :mod:`repro.obs.trace` — ``REPRO_TRACE=1`` opt-in distributed spans,
+    exported as Chrome trace-event JSON via ``python -m repro.obs render``;
+  * :mod:`repro.obs.recorder` — fixed-size flight recorder with
+    slow-query exemplar capture.
+"""
+from . import metrics, recorder, render, trace
+from .metrics import (HIST_SUBBUCKET_BITS, Histogram, MetricsRegistry,
+                      merge_snapshots, summarize_snapshot)
+from .recorder import FlightRecorder
+
+__all__ = ["metrics", "recorder", "render", "trace",
+           "HIST_SUBBUCKET_BITS", "Histogram", "MetricsRegistry",
+           "merge_snapshots", "summarize_snapshot", "FlightRecorder"]

@@ -30,7 +30,6 @@ Production posture on a single process:
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import os
 import time
@@ -43,6 +42,8 @@ import numpy as np
 from repro.analysis import racecheck
 from repro.core.index import IndexConfig, IndexState
 from repro.core.segments import SegmentedIndex
+from repro.obs import FlightRecorder, MetricsRegistry
+from repro.obs import trace as obs_trace
 
 __all__ = ["ServeConfig", "AnnServingEngine", "enable_compilation_cache",
            "compilation_cache_stats", "shape_buckets", "bucket_for",
@@ -70,6 +71,57 @@ def _cache_listener(event: str, **_kw) -> None:
         _CACHE_STATS["misses"] += 1
 
 
+def _install_atomic_cache_writes() -> None:
+    """Make jax's on-disk cache writes atomic (write-temp + os.replace).
+
+    ``LRUCache.put`` writes cache files with a bare ``write_bytes`` and,
+    with eviction disabled (our config), takes no lock — so a reader in
+    another process can observe a half-written entry, and a worker
+    SIGKILL'd mid-write (the §10 chaos drills) leaves a torn file on disk
+    forever.  Either way ``deserialize_executable`` later segfaults the
+    READER on the truncated bytes.  Pre-writing the entry to a
+    same-directory temp file and ``os.replace``-ing it into place means
+    readers see the old entry, the complete new one, or a miss — never a
+    prefix; the original ``put`` then hits its entry-already-exists early
+    return.  Private API: any failure leaves the stock behavior in place.
+    """
+    try:
+        import tempfile
+
+        from jax._src import lru_cache as _lru
+
+        if getattr(_lru.LRUCache.put, "_repro_atomic", False):
+            return
+        orig_put = _lru.LRUCache.put
+        cache_suffix = _lru._CACHE_SUFFIX
+
+        def atomic_put(self, key, val):
+            if key and not self.eviction_enabled:
+                try:
+                    cache_path = self.path / f"{key}{cache_suffix}"
+                    if not cache_path.exists():
+                        fd, tmp = tempfile.mkstemp(
+                            dir=str(self.path), suffix=".tmp")
+                        try:
+                            with os.fdopen(fd, "wb") as f:
+                                f.write(val)
+                            os.replace(tmp, cache_path)
+                        except BaseException:
+                            try:
+                                os.unlink(tmp)
+                            except OSError:
+                                pass
+                            raise
+                except OSError:
+                    pass          # cache write trouble is never fatal
+            return orig_put(self, key, val)
+
+        atomic_put._repro_atomic = True
+        _lru.LRUCache.put = atomic_put
+    except Exception:
+        pass
+
+
 def enable_compilation_cache(path: Optional[str] = None) -> dict:
     """Point JAX's persistent compilation cache at ``path`` (idempotent).
 
@@ -81,6 +133,7 @@ def enable_compilation_cache(path: Optional[str] = None) -> dict:
     path = (path or os.environ.get("REPRO_COMPILE_CACHE_DIR")
             or os.path.expanduser("~/.cache/repro-jax-cache"))
     os.makedirs(path, exist_ok=True)
+    _install_atomic_cache_writes()
     jax.config.update("jax_compilation_cache_dir", path)
     # serving executables are small and numerous; cache all of them
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
@@ -249,12 +302,23 @@ class AnnServingEngine:
                 cap_sample=serve_cfg.cand_cap_sample)
         self._dim = self.index.dim
         self._pending: List[np.ndarray] = []
-        self.stats = {"batches": 0, "queries": 0, "hedges": 0,
-                      "inserts": 0, "deletes": 0, "bucket_cold_hits": 0,
-                      "overflow_hits": 0, "truncated_candidates": 0,
-                      "compact_ms": 0.0, "warmup_ms": 0.0, "total_ms": 0.0,
-                      "batch_ms": [],
-                      "cand_buckets": collections.Counter()}
+        # typed metrics registry (DESIGN.md §12); the registry doubles as
+        # the dict-style ``stats`` facade so every historical mutation
+        # site below stays untouched, while per-batch latency lands in a
+        # log2 histogram instead of the old unbounded list
+        self.metrics = MetricsRegistry("engine")
+        self.stats = self.metrics
+        for k in ("batches", "queries", "hedges", "inserts", "deletes",
+                  "bucket_cold_hits", "overflow_hits",
+                  "truncated_candidates"):
+            self.stats[k] = 0
+        for k in ("compact_ms", "warmup_ms", "total_ms"):
+            self.stats[k] = 0.0
+        self.metrics.family("cand_buckets")
+        self._lat = self.metrics.histogram("batch_ms")
+        # flight recorder: bounded ring of recent batches + slow exemplars
+        # (a batch past the hedge deadline is by definition worth a look)
+        self.flight = FlightRecorder(slow_ms=serve_cfg.hedge_ms)
         # (bucket, index-structure signature) pairs already compiled; a
         # query against a missing pair implies an XLA compile (cold hit)
         self._warm: set = set()
@@ -424,22 +488,26 @@ class AnnServingEngine:
         if key not in self._warm:
             self.stats["bucket_cold_hits"] += 1
             self._warm.add(key)
+        used = ()
+        obs_trace.capture_begin()
         t0 = time.perf_counter()
-        if self.serve_cfg.compact_probe:
-            d, i, used = self.index.query_compact(
-                jnp.asarray(batch), floor=self.serve_cfg.cand_bucket_min,
-                overflow=self.serve_cfg.cand_overflow, stats=self.stats)
-            for seg_key in used:
-                self.stats["cand_buckets"][seg_key[1]] += 1
-                ck = (batch.shape[0], sig) + seg_key
-                if ck not in self._warm:
-                    # an unplanned (batch, candidate)-bucket compile: the
-                    # honest recompile counter the benchmarks assert on
-                    self.stats["bucket_cold_hits"] += 1
-                    self._warm.add(ck)
-        else:
-            d, i = self.index.query(jnp.asarray(batch))
-        d.block_until_ready()
+        with obs_trace.span("engine_batch", bucket=int(batch.shape[0]),
+                            n_real=int(n_real)):
+            if self.serve_cfg.compact_probe:
+                d, i, used = self.index.query_compact(
+                    jnp.asarray(batch), floor=self.serve_cfg.cand_bucket_min,
+                    overflow=self.serve_cfg.cand_overflow, stats=self.stats)
+                for seg_key in used:
+                    self.stats["cand_buckets"][seg_key[1]] += 1
+                    ck = (batch.shape[0], sig) + seg_key
+                    if ck not in self._warm:
+                        # an unplanned (batch, candidate)-bucket compile:
+                        # the honest recompile counter benchmarks assert on
+                        self.stats["bucket_cold_hits"] += 1
+                        self._warm.add(ck)
+            else:
+                d, i = self.index.query(jnp.asarray(batch))
+            d.block_until_ready()
         ms = (time.perf_counter() - t0) * 1e3
         if ms > self.serve_cfg.hedge_ms:
             # hedge deadline missed: recorded here; the cluster router
@@ -448,7 +516,13 @@ class AnnServingEngine:
         self.stats["batches"] += 1
         self.stats["queries"] += n_real
         self.stats["total_ms"] += ms
-        self.stats["batch_ms"].append(ms)
+        self._lat.record_ms(ms)
+        entry = {"bucket": int(batch.shape[0]), "n_real": int(n_real),
+                 "rungs": [list(u) for u in used]}
+        if ms > self.flight.slow_ms:
+            # slow-path only: stamp the exemplar with a result preview
+            entry["preview_d"] = np.asarray(d[:1]).tolist()  # repro: allow[r1-host-sync] flight-recorder slow-exemplar capture — batch-boundary read after block_until_ready, slow path only (DESIGN.md §12)
+        self.flight.record(ms, entry, spans=obs_trace.capture_end())
         return np.asarray(d), np.asarray(i)  # repro: allow[r1-host-sync] batch-boundary result conversion after block_until_ready
 
     def run_padded(self, batch: np.ndarray, n_real: int,
@@ -520,7 +594,6 @@ class AnnServingEngine:
         return np.concatenate(out_d), np.concatenate(out_i)
 
     def summary(self) -> dict:
-        lat = np.asarray(self.stats["batch_ms"] or [0.0], np.float64)
         total_s = self.stats["total_ms"] / 1e3
         quality = None
         if self.autotune is not None:
@@ -560,11 +633,15 @@ class AnnServingEngine:
             },
             "compile_cache": compilation_cache_stats(),
             "warmup_ms": self.stats["warmup_ms"],
-            "mean_batch_ms": float(lat.mean()),
-            # quantiles over per-batch latencies (interpolated, not an
-            # index into the batch list as if samples were per-query)
-            "p50_batch_ms": float(np.percentile(lat, 50)),
-            "p99_batch_ms": float(np.percentile(lat, 99)),
+            "mean_batch_ms": self._lat.mean_ms,
+            # exact-bound quantiles from the log2 latency histogram
+            # (DESIGN.md §12): the reported value is the upper edge of the
+            # bucket provably containing the quantile (≤12.5% wide), and
+            # memory stays O(1) under sustained drain() — no sample list
+            "p50_batch_ms": self._lat.quantile_ms(0.50),
+            "p99_batch_ms": self._lat.quantile_ms(0.99),
+            "p999_batch_ms": self._lat.quantile_ms(0.999),
+            "flight": self.flight.summary(),
             "queries_per_s": (self.stats["queries"] / total_s
                               if total_s > 0 else 0.0),
         }

@@ -54,3 +54,23 @@ except ImportError:
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# Cap the suite's memory-mapping count.  Every jitted executable lives in
+# jax's process-lifetime caches, and each one holds mmap'd code pages; a
+# few hundred engine-heavy tests accumulate ~65k mappings, overrun the
+# kernel's vm.max_map_count default (65530), and the next mmap inside XLA
+# — a compile or a cache deserialize — segfaults the whole run.  Dropping
+# the jit caches between modules keeps the count bounded; the persistent
+# compilation cache (DESIGN.md §8) turns the resulting recompiles into
+# disk reads.
+# ---------------------------------------------------------------------------
+@pytest.fixture(autouse=True, scope="module")
+def _free_jit_executables():
+    yield
+    if "jax" in sys.modules:
+        try:
+            sys.modules["jax"].clear_caches()
+        except Exception:
+            pass
