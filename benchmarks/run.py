@@ -59,11 +59,21 @@ def _headline(name: str, d: dict) -> dict:
                                              "startup_speedup"),
                 "zero_recompiles": d.get("zero_recompiles_after_warmup")}
     if name == "cluster":
+        # multiprocess_speedup = process_qps / inproc_qps, both from the
+        # multiprocess section's OWN run at equal topology — the headline
+        # carries the denominator so the ratio can't be misread against
+        # the steady-state qps, whose router shape differs
         return {"qps": d.get("steady_qps"),
                 "multiprocess_qps": _get(d, "multiprocess", "process_qps"),
+                "multiprocess_inproc_qps": _get(d, "multiprocess",
+                                                "inproc_qps"),
                 "multiprocess_speedup": _get(d, "multiprocess", "speedup"),
                 "multiprocess_workers": _get(d, "multiprocess", "workers"),
                 "cores": _get(d, "multiprocess", "cores"),
+                "shm_speedup": _get(d, "shm_vs_socket", "speedup"),
+                "shm_zero_socket_payload": _get(d, "shm_vs_socket", "flags",
+                                                "shm_zero_socket_payload"),
+                "tcp_qps": _get(d, "tcp_vs_unix", "tcp_qps"),
                 "acceptance_ok": _get(d, "acceptance", "ok")}
     if name == "quality":
         return {"tables_needed": _get(d, "table_claim", "tables_needed"),

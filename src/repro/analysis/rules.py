@@ -303,6 +303,13 @@ class WireProtocolRule(Rule):
     framing), and an off-whitelist dtype would only surface as a
     ``TypeError`` at send time on some rarely-hit path.  The whitelist is
     imported from the runtime codec, so the rule cannot drift from it.
+
+    The pickle ban covers whole modules (``pickle`` et al.) AND the
+    pickle-backed corners of otherwise-legitimate packages:
+    ``multiprocessing.shared_memory``/``resource_tracker`` are fine (the
+    §13 slab fast path moves raw bytes + JSON descriptors), but
+    ``multiprocessing.reduction``/``connection`` are pickling transports
+    and banned by dotted prefix.
     """
 
     id = "r3-wire-protocol"
@@ -311,6 +318,10 @@ class WireProtocolRule(Rule):
     SCOPE = ("repro/cluster/",)
     FORBIDDEN_IMPORTS = {"pickle", "cPickle", "marshal", "shelve", "dill",
                          "cloudpickle"}
+    # dotted-prefix bans inside packages whose other submodules are legal
+    FORBIDDEN_PREFIXES = ("multiprocessing.reduction",
+                          "multiprocessing.connection",
+                          "multiprocessing.managers")
     DTYPE_CALLS: Dict[str, int] = {
         # terminal name -> positional index of the dtype argument
         "asarray": 1, "ascontiguousarray": 1, "array": 1, "frombuffer": 1,
@@ -340,21 +351,30 @@ class WireProtocolRule(Rule):
     def applies(self, path: str) -> bool:
         return path.startswith(self.SCOPE)
 
+    def _banned_import(self, name: str) -> bool:
+        if name.split(".")[0] in self.FORBIDDEN_IMPORTS:
+            return True
+        return any(name == p or name.startswith(p + ".")
+                   for p in self.FORBIDDEN_PREFIXES)
+
     def run(self, mod: Module) -> List[Finding]:
         out: List[Finding] = []
         for node in ast.walk(mod.tree):
             if isinstance(node, ast.Import):
                 for alias in node.names:
-                    root = alias.name.split(".")[0]
-                    if root in self.FORBIDDEN_IMPORTS:
+                    if self._banned_import(alias.name):
                         out.append(self._finding(
                             node, mod, "",
                             f"import of {alias.name!r} under cluster/: the "
                             "wire protocol is pickle-free by design "
                             "(DESIGN.md §10)"))
             elif isinstance(node, ast.ImportFrom):
-                root = (node.module or "").split(".")[0]
-                if root in self.FORBIDDEN_IMPORTS:
+                base = node.module or ""
+                # `from multiprocessing import reduction` names the banned
+                # submodule in the alias, not the module field
+                names = [base] + [f"{base}.{a.name}" if base else a.name
+                                  for a in node.names]
+                if any(self._banned_import(n) for n in names if n):
                     out.append(self._finding(
                         node, mod, "",
                         f"import from {node.module!r} under cluster/: the "

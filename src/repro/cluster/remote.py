@@ -43,9 +43,10 @@ from repro.analysis import racecheck
 from repro.obs import trace as obs_trace
 from repro.serve import engine as serve_engine
 
+from . import shm
 from .concurrency import under_quiesce
 from .replica import ReplicaKilled, ShardReplica
-from .transport import TRACE_META_KEY, Connection, connect_unix
+from .transport import TRACE_META_KEY, Connection, connect_address
 from .worker import pack_records, unpack_records
 
 __all__ = ["RemoteReplica", "WorkerHandle", "spawn_replica_grid"]
@@ -65,35 +66,89 @@ def _worker_env() -> dict:
 
 
 class WorkerHandle:
-    """One supervised worker process + its unix socket path."""
+    """One supervised worker process + how to reach it.
 
-    def __init__(self, root: str, tag: str):
+    ``family`` picks the transport: ``'unix'`` spawns the worker on a
+    fresh unix socket path; ``'tcp'`` spawns it on ``tcp:127.0.0.1:0``
+    and resolves the kernel-assigned port through the worker's endpoint
+    file.  An explicit ``address`` (``tcp:host:port``) means the worker
+    is EXTERNAL — already running, possibly on another host — so spawn /
+    sigkill / shutdown-wait become no-ops and only the RPC side applies.
+    """
+
+    def __init__(self, root: str, tag: str, family: str = "unix",
+                 address: Optional[str] = None):
         self.root = root
         self.tag = tag
+        self.family = family
+        self.address = address
+        self.external = address is not None
         os.makedirs(root, exist_ok=True)
         # AF_UNIX paths are capped at ~108 bytes; deep pytest/temp roots
         # overflow that, so the socket lives under the system temp dir
         self.socket_path = os.path.join(
             tempfile.gettempdir(), f"rw-{tag}-{uuid.uuid4().hex[:8]}.sock")
+        self.endpoint_path = os.path.join(root, "endpoint")
         self.log_path = os.path.join(root, "worker.log")
         self.proc: Optional[subprocess.Popen] = None
 
     def spawn(self) -> None:
+        if self.external:
+            return
+        if self.family == "tcp":
+            try:
+                os.unlink(self.endpoint_path)   # stale port from a
+            except FileNotFoundError:           # previous incarnation
+                pass
+            argv = ["--listen", "tcp:127.0.0.1:0",
+                    "--endpoint-file", self.endpoint_path]
+        else:
+            argv = ["--socket", self.socket_path]
         log = open(self.log_path, "ab")
         try:
             self.proc = subprocess.Popen(
-                [sys.executable, "-m", "repro.cluster.worker",
-                 "--socket", self.socket_path],
+                [sys.executable, "-m", "repro.cluster.worker"] + argv,
                 stdout=log, stderr=subprocess.STDOUT, env=_worker_env())
         finally:
             log.close()               # the child holds its own fd now
 
+    def endpoint(self, timeout_s: float = 30.0, giveup=None) -> str:
+        """The connectable address spec; for a spawned TCP worker this
+        waits (bounded) for the endpoint file to materialize."""
+        if self.external:
+            return self.address
+        if self.family != "tcp":
+            return f"unix:{self.socket_path}"
+        import time
+        deadline = time.monotonic() + timeout_s
+        while True:
+            try:
+                with open(self.endpoint_path) as f:
+                    spec = f.read().strip()
+                if spec:
+                    return spec
+            except FileNotFoundError:
+                pass
+            if giveup is not None and giveup():
+                raise ConnectionError(
+                    f"worker died before publishing {self.endpoint_path}")
+            if time.monotonic() > deadline:
+                raise ConnectionError(
+                    f"timed out waiting for endpoint {self.endpoint_path}")
+            time.sleep(0.05)
+
+    def connect(self, timeout_s: float = 30.0, giveup=None):
+        return connect_address(self.endpoint(timeout_s, giveup),
+                               timeout_s=timeout_s, giveup=giveup)
+
     def running(self) -> bool:
+        if self.external:
+            return True               # liveness shows up as RPC failures
         return self.proc is not None and self.proc.poll() is None
 
     def sigkill(self) -> None:
         """The chaos drill: an unannounced, uncatchable process death."""
-        if self.running():
+        if not self.external and self.running():
             self.proc.send_signal(signal.SIGKILL)
             self.proc.wait()
 
@@ -135,12 +190,26 @@ class RemoteReplica:
                  snapshot_every_bytes: Optional[int] = None,
                  snapshot_every_s: Optional[float] = None,
                  rpc_timeout_s: float = 120.0,
-                 spawn_timeout_s: float = 300.0):
+                 spawn_timeout_s: float = 300.0,
+                 family: str = "unix",
+                 address: Optional[str] = None,
+                 shm_pool: Optional[shm.SlabRing] = None,
+                 shm_threshold: Optional[int] = None,
+                 shm_slots: int = 8,
+                 shm_slot_bytes: int = 1 << 20):
         self.shard_id = shard_id
         self.replica_id = replica_id
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.root = root
+        self.family = family
+        # the slab fast path is same-host by construction: never on tcp
+        self._shm_pool = shm_pool if family == "unix" else None
+        self._shm_threshold = shm_threshold if family == "unix" else None
+        self._shm_cfg = (
+            {"threshold": int(shm_threshold), "slots": int(shm_slots),
+             "slot_bytes": int(shm_slot_bytes)}
+            if self._shm_threshold is not None else None)
         self._key_data = self._key_bytes(key)
         # kept ONLY for a fresh worker boot; a respawn over an existing
         # root recovers from its own snapshot + WAL and ignores the seed
@@ -153,9 +222,12 @@ class RemoteReplica:
             "snapshot_every_bytes": snapshot_every_bytes,
             "snapshot_every_s": snapshot_every_s,
         }
+        if self._shm_cfg is not None:
+            self._init_meta["shm"] = self._shm_cfg
         self._rpc_timeout_s = rpc_timeout_s
         self._spawn_timeout_s = spawn_timeout_s
-        self.handle = WorkerHandle(root, f"s{shard_id}r{replica_id}")
+        self.handle = WorkerHandle(root, f"s{shard_id}r{replica_id}",
+                                   family=family, address=address)
         self.conn: Optional[Connection] = None
         self.alive = True
         self.last_seq = 0
@@ -188,12 +260,14 @@ class RemoteReplica:
         """Spawn (if needed) + connect + init; returns #records replayed."""
         if not self.handle.running():
             self.handle.spawn()
-        sock = connect_unix(self.handle.socket_path,
-                            timeout_s=self._spawn_timeout_s,
-                            giveup=lambda: not self.handle.running())
+        sock = self.handle.connect(
+            timeout_s=self._spawn_timeout_s,
+            giveup=lambda: not self.handle.running())
         # init covers engine build + warm-up: no timeout; steady-state RPCs
         # then run under the configured deadline
-        self.conn = Connection(sock, timeout_s=None)
+        self.conn = Connection(sock, timeout_s=None,
+                               shm_tx=self._shm_pool,
+                               shm_threshold=self._shm_threshold)
         try:
             meta, _ = self.conn.request(
                 "init", self._init_meta,
@@ -225,7 +299,13 @@ class RemoteReplica:
 
     # -- replica interface --------------------------------------------------
 
-    def query(self, batch: np.ndarray, n_real: int):
+    @property
+    def supports_staged(self) -> bool:
+        """True when the router may pass a pre-staged slab payload in
+        place of the batch (same-host worker with the fast path armed)."""
+        return self.conn is not None and self.conn.shm_tx is not None
+
+    def query(self, batch: np.ndarray, n_real: int, staged=None):
         if not self.alive:
             raise ReplicaKilled(
                 f"shard {self.shard_id} replica {self.replica_id} is down")
@@ -235,8 +315,12 @@ class RemoteReplica:
         ctx = obs_trace.wire_context()
         if ctx is not None:
             meta[TRACE_META_KEY] = ctx
-        _, (d, i) = self._rpc("query", meta,
-                              [np.ascontiguousarray(batch, np.int32)])
+        # a pre-staged payload IS the batch, already in the shared slab:
+        # the frame ships a descriptor, not the rows (fan-out sends the
+        # same staged slot to every shard)
+        payload = staged if staged is not None else \
+            np.ascontiguousarray(batch, np.int32)
+        _, (d, i) = self._rpc("query", meta, [payload])
         return d, i
 
     @under_quiesce
@@ -380,7 +464,9 @@ class RemoteReplica:
 
 
 def spawn_replica_grid(cfg, serve_cfg, ccfg, key, root: str,
-                       shard_rows: List[np.ndarray]) -> List[List[RemoteReplica]]:
+                       shard_rows: List[np.ndarray],
+                       shm_pool: Optional[shm.SlabRing] = None,
+                       ) -> List[List[RemoteReplica]]:
     """Boot the S×R worker grid with compile-cache staggering.
 
     Worker (0, 0) boots alone first: its engine warm-up fills the shared
@@ -389,10 +475,24 @@ def spawn_replica_grid(cfg, serve_cfg, ccfg, key, root: str,
     full cold compile (the difference is the whole cold-start story at
     W≥4).  Requires ``serve_cfg.persistent_cache``; without it the others
     still boot concurrently, just cold.
+
+    ``ccfg.transport == 'tcp'`` places workers on loopback ``host:port``
+    endpoints (kernel-assigned, resolved via endpoint files); entries in
+    ``ccfg.worker_hosts`` — ``tcp:host:port`` specs in shard-major
+    (s*R + r) order — attach to EXTERNAL, already-running workers
+    instead of spawning (multi-host placement).  ``shm_pool`` is the
+    router-owned request-staging ring shared by every same-host proxy
+    (unix only; the slab fast path never crosses hosts).
     """
     S, R = ccfg.num_shards, ccfg.num_replicas
+    family = "tcp" if ccfg.transport == "tcp" else "unix"
+    hosts = list(getattr(ccfg, "worker_hosts", None) or ())
+    # a previous cluster SIGKILL'd mid-flight may have leaked slabs; a
+    # boot is the natural quiesce point to collect them
+    shm.reap_orphan_slabs()
 
     def make(s: int, r: int) -> RemoteReplica:
+        idx = s * R + r
         return RemoteReplica(
             s, r, cfg, serve_cfg, key,
             os.path.join(root, f"shard{s:02d}", f"replica{r}"),
@@ -400,7 +500,13 @@ def spawn_replica_grid(cfg, serve_cfg, ccfg, key, root: str,
             wal_fsync=ccfg.wal_fsync,
             snapshot_every_bytes=ccfg.snapshot_every_bytes,
             snapshot_every_s=ccfg.snapshot_every_s,
-            rpc_timeout_s=ccfg.rpc_timeout_s)
+            rpc_timeout_s=ccfg.rpc_timeout_s,
+            family=family,
+            address=hosts[idx] if idx < len(hosts) else None,
+            shm_pool=shm_pool,
+            shm_threshold=getattr(ccfg, "shm_threshold_bytes", None),
+            shm_slots=getattr(ccfg, "shm_slots", 8),
+            shm_slot_bytes=getattr(ccfg, "shm_slot_bytes", 1 << 20))
 
     grid: List[List[Optional[RemoteReplica]]] = [
         [None] * R for _ in range(S)]

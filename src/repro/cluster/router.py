@@ -83,8 +83,18 @@ class ClusterConfig:
     wal_fsync: bool = True         # tests may relax for speed
     transport: str = "inproc"      # 'inproc' = ShardReplica objects in this
                                    # process; 'process' = one worker
-                                   # subprocess per replica behind the RPC
-                                   # transport (DESIGN.md §10)
+                                   # subprocess per replica over AF_UNIX +
+                                   # the shm fast path (DESIGN.md §10, §13);
+                                   # 'tcp' = workers on host:port endpoints
+    shm_threshold_bytes: Optional[int] = 16384   # arrays at least this big
+                                   # ride shared-memory slabs instead of the
+                                   # socket ('process' transport only; None
+                                   # disables the fast path entirely)
+    shm_slots: int = 8             # ring geometry, both directions: slots
+    shm_slot_bytes: int = 1 << 20  # per ring x payload bytes per slot
+    worker_hosts: Optional[Tuple[str, ...]] = None   # 'tcp:host:port' specs,
+                                   # shard-major (s*R + r): attach to these
+                                   # external workers instead of spawning
     rpc_timeout_s: float = 120.0   # per-RPC deadline against a worker (init
                                    # is exempt: it covers engine warm-up)
     pipeline_depth: int = 1        # drain(): batches in flight at once; >1
@@ -118,10 +128,23 @@ class ClusterRouter:
         # shard s owns gids {g : g % S == s}; seed rows keep gid == row
         shard_rows = [data[s::S] for s in range(S)]
         self.replicas: List[List[ShardReplica]] = []
-        if ccfg.transport == "process":
+        self._shm = None               # module ref, process transports only
+        self._wire_pool = None         # router-owned request-staging ring
+        if ccfg.transport in ("process", "tcp"):
+            from . import shm as shm_mod
             from .remote import spawn_replica_grid
+            self._shm = shm_mod
+            if (ccfg.transport == "process"
+                    and ccfg.shm_threshold_bytes is not None):
+                try:
+                    self._wire_pool = shm_mod.SlabRing(
+                        slots=ccfg.shm_slots,
+                        slot_bytes=ccfg.shm_slot_bytes, tag="router")
+                except OSError:
+                    self._wire_pool = None   # no /dev/shm: socket path only
             self.replicas = spawn_replica_grid(
-                cfg, serve_cfg, ccfg, self.key, root, shard_rows)
+                cfg, serve_cfg, ccfg, self.key, root, shard_rows,
+                shm_pool=self._wire_pool)
         elif ccfg.transport == "inproc":
             for s in range(S):
                 self.replicas.append([
@@ -136,7 +159,7 @@ class ClusterRouter:
         else:
             raise ValueError(
                 f"unknown transport {ccfg.transport!r} "
-                "(expected 'inproc' or 'process')")
+                "(expected 'inproc', 'process', or 'tcp')")
         self.next_gid = int(data.shape[0])
         self._shard_seq = [0] * S
         self._adopt_durable_state()
@@ -411,6 +434,10 @@ class ClusterRouter:
             if peer is not rep and peer.last_seq > rep.last_seq:
                 caught_up = rep.catch_up_from(peer)
                 break
+        if self._shm is not None:
+            # a SIGKILL'd worker leaks its response ring; its replacement
+            # made a fresh one, so the orphan is collectable right here
+            self._shm.reap_orphan_slabs()
         parked_applied = 0
         parked = self._parked.get(s, [])
         while parked:  # pop AFTER a successful replay: a failure mid-replay
@@ -563,38 +590,69 @@ class ClusterRouter:
                 "(rows marked -1; see stats['dispatch_failures'])")
         return out
 
+    def _stage_fanout(self, rows: np.ndarray, n: int, bucket: int):
+        """One gather for the whole fan-out: pad the batch STRAIGHT into
+        a shared slab slot, so S shards receive descriptor-only frames
+        over one staged copy (and the socket carries zero payload bytes).
+        Returns (staged, padded); staged None = slab path unavailable
+        (ring off/full, batch under threshold, or tcp transport) — then
+        the classic pad + per-send socket copy applies."""
+        nbytes = bucket * self.dim * 4
+        if (self._wire_pool is None
+                or nbytes < (self.ccfg.shm_threshold_bytes or 0)):
+            staged = None
+        else:
+            from .transport import stage_buffer
+            staged = stage_buffer(self._wire_pool, (bucket, self.dim),
+                                  np.int32)
+        if staged is not None:
+            staged, buf = staged
+            buf[:n] = rows
+            buf[n:] = 0
+            return staged, buf
+        if n < bucket:
+            rows = np.concatenate(
+                [rows, np.zeros((bucket - n, self.dim), np.int32)])
+        return None, rows
+
     def _dispatch(self, rows: np.ndarray, ctx=None,
                   ) -> Tuple[np.ndarray, np.ndarray]:
         """Fan one batch out to every shard and fold the top-k lists."""
         n = rows.shape[0]
         bucket = self._any_alive_replica().bucket_for(n)
-        if n < bucket:
-            rows = np.concatenate(
-                [rows, np.zeros((bucket - n, self.dim), np.int32)])
+        staged, padded = self._stage_fanout(rows, n, bucket)
         # _dispatch runs on a pool thread once drain() pipelines, so the
         # counters must go through the lock
         self._bump("batches")
         self._bump("queries", n)
         t0 = time.perf_counter()
-        with obs_trace.span("fanout", parent=ctx,
-                            shards=self.num_shards, n_real=n):
-            fan_ctx = obs_trace.current() or ctx
-            # genuine fan-out: all shards in flight at once, so batch
-            # latency is ~max(per-shard) not sum, and one shard's hedge
-            # wait does not stall the others' dispatch
-            shard_futs = [
-                self._pool.submit(self._query_shard, s, rows, n, fan_ctx)
-                for s in range(self.num_shards)]
-            try:
-                with obs_trace.span("merge", shards=self.num_shards):
-                    out = self._fold_shards(shard_futs, n)
-            except BaseException:
-                # one shard failed: the sibling fan-out tasks are still
-                # running and are NOT in _inflight (only their replica
-                # futures are, and possibly not yet) — wait them out so a
-                # caller's follow-up mutation cannot race an in-flight query
-                cf.wait(shard_futs)
-                raise
+        try:
+            with obs_trace.span("fanout", parent=ctx,
+                                shards=self.num_shards, n_real=n):
+                fan_ctx = obs_trace.current() or ctx
+                # genuine fan-out: all shards in flight at once, so batch
+                # latency is ~max(per-shard) not sum, and one shard's hedge
+                # wait does not stall the others' dispatch
+                shard_futs = [
+                    self._pool.submit(self._query_shard, s, padded, n,
+                                      fan_ctx, staged)
+                    for s in range(self.num_shards)]
+                try:
+                    with obs_trace.span("merge", shards=self.num_shards):
+                        out = self._fold_shards(shard_futs, n)
+                except BaseException:
+                    # one shard failed: the sibling fan-out tasks are still
+                    # running and are NOT in _inflight (only their replica
+                    # futures are, and possibly not yet) — wait them out so
+                    # a caller's follow-up mutation cannot race an in-flight
+                    # query
+                    cf.wait(shard_futs)
+                    raise
+        finally:
+            if staged is not None:
+                # drop the stager's reference; the slot itself frees when
+                # the last in-flight send (a late hedge loser) retires
+                staged.release()
         ms = (time.perf_counter() - t0) * 1e3
         with self._stats_lock:
             self._dispatch_lat.record_ms(ms)
@@ -619,7 +677,7 @@ class ClusterRouter:
         return np.asarray(merged_d)[:n], np.asarray(merged_i)[:n]
 
     def _traced_query(self, rep: ShardReplica, padded: np.ndarray,
-                      n_real: int, ctx, role: str):
+                      n_real: int, ctx, role: str, staged=None):
         """One replica query wrapped in a ``replica_query`` span.
 
         Runs ON the pool thread that serves the future, so the span's
@@ -630,10 +688,13 @@ class ClusterRouter:
         with obs_trace.span("replica_query", parent=ctx,
                             shard=rep.shard_id, replica=rep.replica_id,
                             hedge=role):
+            if staged is not None and getattr(rep, "supports_staged",
+                                              False):
+                return rep.query(padded, n_real, staged=staged)
             return rep.query(padded, n_real)
 
     def _query_shard(self, s: int, padded: np.ndarray, n_real: int,
-                     ctx=None):
+                     ctx=None, staged=None):
         """One shard's answer, with failover and hedged re-issue.
 
         The preferred replica rotates per batch.  A fast failure fails over
@@ -652,7 +713,7 @@ class ClusterRouter:
         with obs_trace.span("shard_query", parent=ctx, shard=s) as sp:
             ctx = obs_trace.current() or ctx
             fut = self._pool.submit(self._traced_query, primary, padded,
-                                    n_real, ctx, "primary")
+                                    n_real, ctx, "primary", staged)
             self._track(fut)
             try:
                 res = fut.result(timeout=self.ccfg.hedge_ms / 1e3)
@@ -677,7 +738,7 @@ class ClusterRouter:
                 sp.set(hedged=True)
                 peer = order[1]
                 fut2 = self._pool.submit(self._traced_query, peer, padded,
-                                         n_real, ctx, "reissue")
+                                         n_real, ctx, "reissue", staged)
                 self._track(fut2)
                 return self._first_complete(
                     s, [(fut, primary), (fut2, peer)], primary)
@@ -689,7 +750,7 @@ class ClusterRouter:
                 for peer in order[1:]:
                     try:
                         res = self._traced_query(peer, padded, n_real,
-                                                 ctx, "failover")
+                                                 ctx, "failover", staged)
                         self._health_ok(peer)
                         return res
                     except Exception as e2:
@@ -804,6 +865,11 @@ class ClusterRouter:
             "cluster_metrics": (obs_metrics.summarize_snapshot(cluster_snap)
                                 if cluster_snap else None),
             "flight": self.flight.summary(),
+            # router-side wire accounting (§13): socket vs slab payload
+            # bytes, staging fallbacks, reaped orphans; None when no RPC
+            # transport is in play (the counters would all be zero)
+            "wire": (self._shm.wire_counters()
+                     if self._shm is not None else None),
             "num_shards": self.ccfg.num_shards,
             "num_replicas": self.ccfg.num_replicas,
             "next_gid": self.next_gid,
@@ -818,3 +884,6 @@ class ClusterRouter:
         for group in self.replicas:
             for rep in group:
                 rep.close()
+        if self._wire_pool is not None:
+            self._wire_pool.close()
+            self._wire_pool = None

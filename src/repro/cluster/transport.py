@@ -1,7 +1,12 @@
-"""Length-prefixed binary RPC transport for shard workers (DESIGN.md §10).
+"""Length-prefixed binary RPC transport for shard workers (DESIGN.md §10, §13).
 
 The multi-process cluster (``repro.cluster.worker`` / ``RemoteReplica``)
-speaks this wire protocol over local stream sockets (``AF_UNIX``).  Design
+speaks this wire protocol over stream sockets — ``AF_UNIX`` for same-host
+workers, ``AF_INET`` (``listen_tcp`` / ``connect_tcp``) for workers placed
+by ``host:port`` spec — and, same-host only, over a shared-memory fast
+path: arrays past a size threshold travel in ``repro.cluster.shm`` ring
+slabs while the socket frame carries a JSON descriptor (segment, offset,
+dtype, shape).  One ``Connection`` contract fronts all three.  Design
 constraints, in order:
 
   * **no pickle on the hot path** — a query batch is a numpy array and it
@@ -28,10 +33,19 @@ Frame layout (little-endian)::
     u8  kind       1=request  2=response  3=error
     u32 req_id     echoes the request on its response/error
     u32 meta_len   JSON header length
-    u8  n_arrays
+    u8  n_arrays   INLINE arrays only (slab-staged arrays ride the meta)
     meta           UTF-8 JSON (method + scalars; errors: etype/emsg)
     per array:     u8 dtype_code  u8 ndim  u32 shape[ndim]
     array bytes    raw buffers, back to back, in descriptor order
+
+Slab-staged arrays are NOT in the binary array section: each one is a
+JSON descriptor under the ``shmv`` meta key — ``{"i": original position,
+"seg": segment, "slot": n, "off": bytes, "dt": wire dtype code, "sh":
+shape, "rel": 's'|'r'}`` — and the receiver re-interleaves them with the
+inline arrays by position, so callers never see which tier a given array
+took.  Descriptors are scalars-only JSON plus the same closed dtype-code
+table as the binary section: no pickle enters the protocol through the
+fast path (analysis rule R3 covers this module and ``shm.py`` alike).
 
 Exceptions raised by a worker's handler are shipped back as an ERROR frame
 carrying the exception class name; :func:`raise_remote_error` re-raises the
@@ -45,13 +59,32 @@ import os
 import socket
 import struct
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+import weakref
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+try:
+    from . import shm
+except ImportError:
+    # the analysis whitelist loader execs this file OUTSIDE its package
+    # (by design: importing repro.cluster would drag jax into the
+    # stdlib+numpy analyzer) — resolve the sibling by path instead;
+    # repro.obs, shm's only repo dependency, is stdlib-only
+    import importlib.util as _ilu
+
+    _spec = _ilu.spec_from_file_location(
+        "_repro_analysis_shm",
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "shm.py"))
+    shm = _ilu.module_from_spec(_spec)
+    _spec.loader.exec_module(shm)
+
 __all__ = ["Connection", "RemoteError", "WIRE_DTYPES", "TRACE_META_KEY",
-           "KIND_REQUEST", "KIND_RESPONSE", "KIND_ERROR", "send_frame",
-           "recv_frame", "listen_unix", "connect_unix", "raise_remote_error"]
+           "KIND_REQUEST", "KIND_RESPONSE", "KIND_ERROR", "SHM_META_KEY",
+           "send_frame", "recv_frame", "listen_unix", "connect_unix",
+           "listen_tcp", "connect_tcp", "tune_tcp", "parse_address",
+           "listen_address", "connect_address", "bound_endpoint",
+           "stage_buffer", "raise_remote_error"]
 
 # Distributed tracing (DESIGN.md §12) rides the JSON meta under this key as
 # {"tid": <hex trace id>, "sid": <int span id>} — scalars in the existing
@@ -59,6 +92,14 @@ __all__ = ["Connection", "RemoteError", "WIRE_DTYPES", "TRACE_META_KEY",
 # new frame kind, no new dtype code, no array payload.  Absent when tracing
 # is off (the common case costs zero header bytes).
 TRACE_META_KEY = "trace"
+
+# Slab-staged array descriptors ride the JSON meta under this key (see the
+# frame-layout notes above); ``rel`` says which side frees the slot —
+# 's' = the sender, when the response to this request arrives; 'r' = the
+# receiver, when its last borrowed view of the array dies.
+SHM_META_KEY = "shmv"
+REL_SENDER = "s"
+REL_RECEIVER = "r"
 
 _MAGIC = 0x52504331                       # 'RPC1'
 _PREAMBLE = struct.Struct("<Q")           # frame_len
@@ -118,18 +159,92 @@ def _encode_header(kind: int, req_id: int, meta: Optional[dict],
     return head, bufs
 
 
+def _stage_one(shm_tx: "shm.SlabRing", idx: int, a: np.ndarray,
+               code: int, rel: str) -> Optional[dict]:
+    """Copy one array into a claimed slab slot; None = fall back to the
+    socket (ring full or payload exceeds the slot size)."""
+    got = shm_tx.stage(a.nbytes)
+    if got is None:
+        shm.count("shm_stage_fallbacks")
+        return None
+    slot, off, view = got
+    view[:] = memoryview(a).cast("B")
+    view.release()
+    shm.count("shm_payload_tx_bytes", a.nbytes)
+    return {"i": idx, "seg": shm_tx.name, "slot": slot, "off": off,
+            "dt": code, "sh": list(a.shape), "rel": rel}
+
+
 def send_frame(sock: socket.socket, kind: int, req_id: int,
                meta: Optional[dict] = None,
-               arrays: Sequence[np.ndarray] = ()) -> None:
-    head, bufs = _encode_header(kind, req_id, meta, arrays)
-    total = len(head) + sum(b.nbytes for b in bufs)
+               arrays: Sequence[np.ndarray] = (),
+               shm_tx: Optional["shm.SlabRing"] = None,
+               shm_threshold: Optional[int] = None,
+               ) -> List[Callable[[], None]]:
+    """Send one frame; arrays may route through the slab fast path.
+
+    With ``shm_tx`` set, any array of at least ``shm_threshold`` bytes is
+    staged in the ring (or pre-staged: a ``shm.StagedPayload`` element is
+    sent descriptor-only, acquiring one reference for this frame).
+    Returns the release callbacks for sender-released slots — a client
+    MUST run them once the response for ``req_id`` arrives (or the RPC
+    fails); responses return an empty list, their slots being freed by
+    the receiver's views.
+    """
+    inline: List[np.ndarray] = []
+    shm_descs: List[dict] = []
+    releases: List[Callable[[], None]] = []
+    rel = REL_SENDER if kind == KIND_REQUEST else REL_RECEIVER
+    for idx, a in enumerate(arrays):
+        if isinstance(a, shm.StagedPayload):
+            if kind != KIND_REQUEST:
+                raise TypeError(
+                    "pre-staged payloads are request-direction only")
+            desc = dict(a.acquire())
+            desc["i"] = idx
+            desc["rel"] = REL_SENDER
+            shm_descs.append(desc)
+            releases.append(a.release)
+            shm.count("shm_payload_tx_bytes", _desc_nbytes(desc))
+            continue
+        a = np.ascontiguousarray(a)
+        code = _DTYPE_CODE.get(a.dtype)
+        if code is None:
+            raise TypeError(f"dtype {a.dtype} is not on the wire-protocol "
+                            f"whitelist {[str(d) for d in _DTYPES]}")
+        if (shm_tx is not None and shm_threshold is not None
+                and a.nbytes >= shm_threshold):
+            desc = _stage_one(shm_tx, idx, a, code, rel)
+            if desc is not None:
+                shm_descs.append(desc)
+                if rel == REL_SENDER:
+                    releases.append(
+                        lambda ring=shm_tx, s=desc["slot"]: ring.release(s))
+                continue
+        inline.append(a)
+    if shm_descs:
+        meta = dict(meta or {})
+        meta[SHM_META_KEY] = shm_descs
+    head, bufs = _encode_header(kind, req_id, meta, inline)
+    payload = sum(b.nbytes for b in bufs)
+    if payload:
+        shm.count("socket_payload_tx_bytes", payload)
+    total = len(head) + payload
     pieces = [_PREAMBLE.pack(total), head] + bufs
-    if total < _COALESCE_BYTES:
-        sock.sendall(b"".join(pieces))
-    else:
-        # vectored send: big array buffers go to the kernel as-is
-        for p in pieces:
-            sock.sendall(p)
+    try:
+        if total < _COALESCE_BYTES:
+            sock.sendall(b"".join(pieces))
+        else:
+            # vectored send: big array buffers go to the kernel as-is
+            for p in pieces:
+                sock.sendall(p)
+    except BaseException:
+        # the frame never (fully) left: retire sender-released slots now,
+        # nobody will deliver the response that normally frees them
+        for cb in releases:
+            cb()
+        raise
+    return releases
 
 
 def _recv_exact(sock: socket.socket, n: int) -> memoryview:
@@ -145,12 +260,43 @@ def _recv_exact(sock: socket.socket, n: int) -> memoryview:
     return view
 
 
-def recv_frame(sock: socket.socket) -> Tuple[int, int, dict,
-                                             List[np.ndarray]]:
+def _desc_nbytes(desc: dict) -> int:
+    code = int(desc["dt"])
+    if not 0 <= code < len(_DTYPES):
+        raise ConnectionError(f"unknown wire dtype code {code}")
+    shape = tuple(int(x) for x in desc["sh"])
+    return int(np.prod(shape, dtype=np.int64)) * _DTYPES[code].itemsize
+
+
+def _resolve_shm(reader: "shm.SlabReader", desc: dict) -> np.ndarray:
+    """Map one slab descriptor to a zero-copy array view."""
+    nbytes = _desc_nbytes(desc)
+    dt = _DTYPES[int(desc["dt"])]
+    shape = tuple(int(x) for x in desc["sh"])
+    try:
+        view = reader.view(str(desc["seg"]), int(desc["off"]), nbytes)
+        arr = np.frombuffer(view, dtype=dt).reshape(shape)
+    except (FileNotFoundError, OSError, ValueError) as err:
+        raise ConnectionError(
+            f"shared-memory slab {desc.get('seg')!r} unavailable: "
+            f"{err}") from err
+    if desc.get("rel") == REL_RECEIVER:
+        # receiver-released slot: freed when the last borrowed view dies
+        weakref.finalize(arr, reader.release_slot,
+                         str(desc["seg"]), int(desc["slot"]))
+    shm.count("shm_payload_rx_bytes", nbytes)
+    return arr
+
+
+def recv_frame(sock: socket.socket,
+               shm_reader: Optional["shm.SlabReader"] = None,
+               ) -> Tuple[int, int, dict, List[np.ndarray]]:
     """Read one frame; returns (kind, req_id, meta, arrays).
 
-    The arrays are zero-copy ``np.frombuffer`` views over the single
-    receive buffer (they keep it alive; callers may hold them freely).
+    The arrays are zero-copy ``np.frombuffer`` views — over the single
+    receive buffer, or (descriptor-routed arrays, ``shm_reader`` given)
+    over the peer's slab segment; either way they keep their backing
+    storage alive and callers may hold them freely.
     """
     (frame_len,) = _PREAMBLE.unpack(bytes(_recv_exact(sock, _PREAMBLE.size)))
     if not 0 < frame_len <= _MAX_FRAME:
@@ -181,6 +327,7 @@ def recv_frame(sock: socket.socket) -> Tuple[int, int, dict,
             shape.append(d)
         shapes.append((_DTYPES[code], tuple(shape)))
     arrays = []
+    payload = 0
     for dt, shape in shapes:
         nbytes = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
         if pos + nbytes > frame_len:
@@ -188,6 +335,24 @@ def recv_frame(sock: socket.socket) -> Tuple[int, int, dict,
         arrays.append(np.frombuffer(buf[pos: pos + nbytes],
                                     dtype=dt).reshape(shape))
         pos += nbytes
+        payload += nbytes
+    if payload:
+        shm.count("socket_payload_rx_bytes", payload)
+    descs = meta.pop(SHM_META_KEY, None)
+    if descs:
+        if shm_reader is None:
+            raise ConnectionError(
+                "peer sent slab descriptors on a connection with no "
+                "shared-memory reader")
+        total = len(arrays) + len(descs)
+        out: List[Optional[np.ndarray]] = [None] * total
+        for desc in descs:
+            i = int(desc.get("i", -1))
+            if not 0 <= i < total or out[i] is not None:
+                raise ConnectionError(f"bad slab descriptor index {i}")
+            out[i] = _resolve_shm(shm_reader, desc)
+        it = iter(arrays)
+        arrays = [a if a is not None else next(it) for a in out]
     return kind, req_id, meta, arrays
 
 
@@ -261,6 +426,136 @@ def connect_unix(path: str, timeout_s: float = 30.0,
             time.sleep(poll_s)
 
 
+def tune_tcp(sock: socket.socket) -> None:
+    """RPC-appropriate TCP settings, applied on both accept and connect.
+
+    NODELAY because frames are latency-bound request/response pairs (a
+    Nagle-delayed 40ms per small descriptor frame would dwarf the query
+    itself); keepalive so a silently vanished peer (host down, not
+    process down — TCP's failure mode that AF_UNIX cannot have) surfaces
+    as ConnectionError within minutes instead of hanging a blocking recv
+    forever.  The probe knobs are Linux-only, hence the hasattr guards.
+    """
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE, 1)
+    for opt, val in (("TCP_KEEPIDLE", 60), ("TCP_KEEPINTVL", 10),
+                     ("TCP_KEEPCNT", 6)):
+        if hasattr(socket, opt):
+            sock.setsockopt(socket.IPPROTO_TCP, getattr(socket, opt), val)
+
+
+def listen_tcp(host: str = "127.0.0.1", port: int = 0) -> socket.socket:
+    """Bind + listen on TCP; ``port=0`` lets the kernel pick (the bound
+    endpoint is then published via :func:`bound_endpoint`)."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind((host, port))
+    srv.listen(16)
+    return srv
+
+
+def connect_tcp(host: str, port: int, timeout_s: float = 30.0,
+                poll_s: float = 0.05, giveup=None) -> socket.socket:
+    """Connect with retry + exponential backoff.
+
+    Connection-refused during boot means "not bound yet" — retry until
+    the deadline (§10 failure semantics: refusal is a *connect-time*
+    state, unlike a reset, which is a dead peer mid-conversation and
+    always surfaces as ConnectionError from the codec).
+    """
+    import time
+    deadline = time.monotonic() + timeout_s
+    delay = poll_s
+    while True:
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        try:
+            sock.settimeout(min(max(1.0, poll_s), timeout_s))
+            sock.connect((host, port))
+            sock.settimeout(None)
+            tune_tcp(sock)
+            return sock
+        except OSError as err:
+            sock.close()
+            if giveup is not None and giveup():
+                raise ConnectionError(
+                    f"worker died before binding {host}:{port}") from err
+            if time.monotonic() > deadline:
+                raise ConnectionError(
+                    f"timed out connecting to {host}:{port}") from err
+            time.sleep(delay)
+            delay = min(delay * 2, 1.0)
+
+
+def parse_address(spec: str) -> Tuple[str, object]:
+    """``'unix:/path'`` | ``'tcp:host:port'`` | bare path (legacy unix).
+
+    Returns ('unix', path) or ('tcp', (host, port)).
+    """
+    if spec.startswith("tcp:"):
+        host, _, port = spec[4:].rpartition(":")
+        if not host or not port.isdigit():
+            raise ValueError(f"bad tcp address {spec!r} "
+                             "(expected tcp:host:port)")
+        return "tcp", (host, int(port))
+    if spec.startswith("unix:"):
+        return "unix", spec[5:]
+    return "unix", spec
+
+
+def listen_address(spec: str) -> Tuple[str, socket.socket]:
+    """Bind + listen per an address spec; returns (family, server sock)."""
+    family, addr = parse_address(spec)
+    if family == "tcp":
+        return family, listen_tcp(*addr)
+    return family, listen_unix(addr)
+
+
+def connect_address(spec: str, timeout_s: float = 30.0,
+                    poll_s: float = 0.05, giveup=None) -> socket.socket:
+    family, addr = parse_address(spec)
+    if family == "tcp":
+        return connect_tcp(addr[0], addr[1], timeout_s=timeout_s,
+                           poll_s=poll_s, giveup=giveup)
+    return connect_unix(addr, timeout_s=timeout_s, poll_s=poll_s,
+                        giveup=giveup)
+
+
+def bound_endpoint(srv: socket.socket) -> str:
+    """The connectable spec of a bound listener (resolves ``port=0``)."""
+    if srv.family == socket.AF_INET:
+        host, port = srv.getsockname()[:2]
+        return f"tcp:{host}:{port}"
+    return f"unix:{srv.getsockname()}"
+
+
+# -- shared-memory staging ---------------------------------------------------
+
+def stage_buffer(ring: "shm.SlabRing", shape: Tuple[int, ...], dtype,
+                 ) -> Optional[Tuple["shm.StagedPayload", np.ndarray]]:
+    """Claim a slab slot and hand back a writable array view over it.
+
+    The router pads its fan-out batch straight into the slab through the
+    returned view, then sends the SAME :class:`shm.StagedPayload` to
+    every shard — one gather, zero per-send payload copies.  None means
+    the ring is full (fall back to the plain array path, counted).
+    """
+    dt = np.dtype(dtype)
+    code = _DTYPE_CODE.get(dt)
+    if code is None:
+        raise TypeError(f"dtype {dt} is not on the wire-protocol "
+                        f"whitelist {[str(d) for d in _DTYPES]}")
+    nbytes = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+    got = ring.stage(nbytes)
+    if got is None:
+        shm.count("shm_stage_fallbacks")
+        return None
+    slot, off, view = got
+    arr = np.frombuffer(view, dtype=dt).reshape(shape)
+    desc = {"seg": ring.name, "slot": slot, "off": off,
+            "dt": code, "sh": list(shape), "rel": REL_SENDER}
+    return shm.StagedPayload(ring, slot, desc), arr
+
+
 class Connection:
     """One framed RPC connection (client side or server side).
 
@@ -270,15 +565,26 @@ class Connection:
     serialize (the worker's replica is single-threaded anyway — engines
     are not thread-safe vs mutation), while different workers proceed in
     parallel.  All socket-level failures surface as ``ConnectionError``.
+
+    With ``shm_tx`` (a ring this side owns) outbound arrays of at least
+    ``shm_threshold`` bytes take the slab fast path; inbound slab
+    descriptors resolve through a per-connection :class:`shm.SlabReader`
+    regardless (attach is by segment name — no handshake).  Same-host
+    connections only; the TCP transport leaves both unset.
     """
 
     def __init__(self, sock: socket.socket,
-                 timeout_s: Optional[float] = None):
+                 timeout_s: Optional[float] = None,
+                 shm_tx: Optional["shm.SlabRing"] = None,
+                 shm_threshold: Optional[int] = None):
         self.sock = sock
         if timeout_s is not None:
             sock.settimeout(timeout_s)
         self._lock = threading.Lock()
         self._next_id = 0
+        self.shm_tx = shm_tx
+        self.shm_threshold = shm_threshold
+        self._shm_reader = shm.SlabReader()
 
     def request(self, method: str, meta: Optional[dict] = None,
                 arrays: Sequence[np.ndarray] = (),
@@ -288,11 +594,20 @@ class Connection:
         with self._lock:
             self._next_id += 1
             rid = self._next_id
+            releases: List = []
             try:
-                send_frame(self.sock, KIND_REQUEST, rid, m, arrays)
-                kind, got_id, rmeta, rarrays = recv_frame(self.sock)
+                releases = send_frame(
+                    self.sock, KIND_REQUEST, rid, m, arrays,
+                    shm_tx=self.shm_tx, shm_threshold=self.shm_threshold)
+                kind, got_id, rmeta, rarrays = recv_frame(
+                    self.sock, self._shm_reader)
             except (OSError, socket.timeout) as err:
                 raise ConnectionError(f"rpc {method!r} failed: {err}") from err
+            finally:
+                # the peer is done with request-direction slots once its
+                # response arrived — and can never answer a failed RPC
+                for cb in releases:
+                    cb()
         if got_id != rid:
             raise ConnectionError(
                 f"rpc {method!r}: response id {got_id} != request id {rid}")
@@ -305,14 +620,17 @@ class Connection:
     # -- server side -------------------------------------------------------
 
     def recv_request(self) -> Tuple[int, str, dict, List[np.ndarray]]:
-        kind, rid, meta, arrays = recv_frame(self.sock)
+        kind, rid, meta, arrays = recv_frame(self.sock, self._shm_reader)
         if kind != KIND_REQUEST:
             raise ConnectionError(f"expected request frame, got kind {kind}")
         return rid, meta.pop("method", ""), meta, arrays
 
     def respond(self, req_id: int, meta: Optional[dict] = None,
                 arrays: Sequence[np.ndarray] = ()) -> None:
-        send_frame(self.sock, KIND_RESPONSE, req_id, meta, arrays)
+        # response-direction slots are receiver-released (the client's
+        # borrowed views free them), so there is nothing to run here
+        send_frame(self.sock, KIND_RESPONSE, req_id, meta, arrays,
+                   shm_tx=self.shm_tx, shm_threshold=self.shm_threshold)
 
     def respond_error(self, req_id: int, exc: BaseException) -> None:
         send_frame(self.sock, KIND_ERROR, req_id, error_meta(exc))
@@ -322,3 +640,4 @@ class Connection:
             self.sock.close()
         except OSError:
             pass
+        self._shm_reader.close()

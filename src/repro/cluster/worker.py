@@ -15,9 +15,17 @@ on the proxy's connection lock — cross-shard parallelism comes from
 running S×R of these *processes*, each with its own GIL and XLA CPU
 client, which is the whole point of the exercise.
 
-Boot protocol: bind + listen on ``--socket``, then accept.  A fresh
-replica is created by the ``init`` request (config + seed rows arrive
-over the wire — nothing is pickled to disk for the worker to trust); a
+Boot protocol: bind + listen on ``--listen`` (``unix:/path`` or
+``tcp:host:port``; the legacy ``--socket PATH`` spelling still works),
+then accept.  A TCP worker bound to port 0 publishes its real endpoint
+through ``--endpoint-file`` (written atomically: tmp + rename), which is
+how the parent resolves a kernel-assigned port.  A fresh replica is
+created by the ``init`` request (config + seed rows arrive over the
+wire — nothing is pickled to disk for the worker to trust); on AF_UNIX
+connections the same ``init`` meta may carry a ``shm`` block, after
+which the worker answers big arrays through its own slab ring
+(DESIGN.md §13) — the ring is torn down with the worker, and a SIGKILL'd
+worker's leaked ring is reaped by the survivors.  A
 worker restarted over an existing root directory recovers from its own
 snapshot + WAL inside the same ``init`` call and reports how many records
 it replayed.  A SIGKILL at ANY point is survivable by construction:
@@ -42,7 +50,9 @@ import numpy as np
 from repro.analysis.racecheck import RaceViolation
 from repro.obs import trace as obs_trace
 
-from .transport import TRACE_META_KEY, Connection, listen_unix
+from . import shm
+from .transport import (TRACE_META_KEY, Connection, bound_endpoint,
+                        listen_address, parse_address, tune_tcp)
 from .wal import OP_INSERT, WalRecord
 
 __all__ = ["main", "pack_records", "unpack_records"]
@@ -83,6 +93,8 @@ class WorkerServer:
 
     def __init__(self):
         self.replica = None
+        self.shm_ring: Optional[shm.SlabRing] = None
+        self._shm_cfg: Optional[dict] = None
 
     # every handler: (meta, arrays) -> (meta, arrays)
 
@@ -109,6 +121,7 @@ class WorkerServer:
             wal_fsync=bool(meta.get("wal_fsync", True)),
             snapshot_every_bytes=meta.get("snapshot_every_bytes"),
             snapshot_every_s=meta.get("snapshot_every_s"))
+        self._shm_cfg = meta.get("shm") or None
         return {"last_seq": self.replica.last_seq,
                 "next_gid": self.replica.next_gid,
                 "dim": self.replica.engine.index.dim,
@@ -194,7 +207,26 @@ class WorkerServer:
             raise RuntimeError(f"rpc {method!r} before init")
         return handler(meta, arrays)
 
+    def _enable_shm(self, conn: Connection) -> None:
+        """Arm the connection's slab fast path (post-``init``, AF_UNIX
+        only).  The ring is created lazily on the ``shm`` block the init
+        meta carried — no handshake: the client's reader attaches our
+        segment by the name each descriptor carries."""
+        if self._shm_cfg is None or conn.sock.family != socket.AF_UNIX:
+            return
+        if self.shm_ring is None:
+            self.shm_ring = shm.SlabRing(
+                slots=int(self._shm_cfg.get("slots", 8)),
+                slot_bytes=int(self._shm_cfg.get("slot_bytes", 1 << 20)),
+                tag="wtx")
+        conn.shm_tx = self.shm_ring
+        conn.shm_threshold = int(self._shm_cfg["threshold"])
+
     def serve_connection(self, conn: Connection) -> None:
+        # NOTE the borrow contract behind the request fast path: handlers
+        # must not retain request-array views past their response — the
+        # client recycles request-direction slots the moment the response
+        # frame arrives (every handler above copies or fully consumes)
         while True:
             try:
                 rid, method, meta, arrays = conn.recv_request()
@@ -202,6 +234,8 @@ class WorkerServer:
                 return                  # router went away; await reconnect
             try:
                 rmeta, rarrays = self.dispatch(method, meta, arrays)
+                if method == "init":
+                    self._enable_shm(conn)
             except _Shutdown:
                 conn.respond(rid, {"ok": True})
                 raise
@@ -220,14 +254,29 @@ class WorkerServer:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--socket", required=True,
-                    help="unix socket path to bind")
+    ap.add_argument("--socket", help="unix socket path to bind (legacy "
+                    "spelling of --listen unix:PATH)")
+    ap.add_argument("--listen", help="address spec to bind: unix:/path "
+                    "or tcp:host:port (port 0 = kernel-assigned)")
+    ap.add_argument("--endpoint-file", help="publish the bound endpoint "
+                    "spec here (atomic write; how a tcp:...:0 parent "
+                    "learns the real port)")
     args = ap.parse_args(argv)
-    srv = listen_unix(args.socket)
+    spec = args.listen or (f"unix:{args.socket}" if args.socket else None)
+    if spec is None:
+        ap.error("one of --listen / --socket is required")
+    family, srv = listen_address(spec)
+    if args.endpoint_file:
+        tmp = args.endpoint_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(bound_endpoint(srv) if family == "tcp" else spec)
+        os.replace(tmp, args.endpoint_file)
     server = WorkerServer()
     try:
         while True:
             sock, _ = srv.accept()
+            if family == "tcp":
+                tune_tcp(sock)
             conn = Connection(sock)
             try:
                 server.serve_connection(conn)
@@ -235,17 +284,25 @@ def main(argv=None) -> int:
                 return 0
             finally:
                 conn.close()
+                if server.shm_ring is not None:
+                    # the departed client's borrowed views can never
+                    # release their slots; a reconnecting client starts
+                    # from an empty ring
+                    server.shm_ring.reset()
     finally:
         if server.replica is not None:
             try:
                 server.replica.close()
             except Exception:
                 pass
+        if server.shm_ring is not None:
+            server.shm_ring.close()
         srv.close()
-        try:
-            os.unlink(args.socket)
-        except OSError:
-            pass
+        if family == "unix":
+            try:
+                os.unlink(parse_address(spec)[1])
+            except OSError:
+                pass
 
 
 if __name__ == "__main__":

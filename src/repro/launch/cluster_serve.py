@@ -8,10 +8,16 @@ mutations, admission control — with an optional kill/recover chaos drill.
 ``--workers N`` switches to the multi-process deployment: N shard-worker
 subprocesses (x ``--replicas`` each) behind the RPC transport, supervised by
 this launcher — a worker process that dies is respawned and recovered
-(snapshot + WAL replay + peer catch-up) by the supervision sweep.  The
-chaos drill then SIGKILLs a real process instead of flipping a flag:
+(snapshot + WAL replay + peer catch-up) by the supervision sweep, and its
+leaked shared-memory slabs are reaped.  The chaos drill then SIGKILLs a
+real process instead of flipping a flag:
 
   PYTHONPATH=src python -m repro.launch.cluster_serve --workers 4 --chaos
+
+``--transport`` picks the wire explicitly: ``process`` (AF_UNIX + the
+shared-memory fast path, DESIGN.md §13) or ``tcp`` (loopback AF_INET —
+the multi-host transport exercised end to end on one machine); both imply
+worker subprocesses, so ``--workers`` defaults to ``--shards`` there.
 """
 from __future__ import annotations
 
@@ -45,6 +51,11 @@ def supervise_once(router: ClusterRouter) -> list:
             if handle is not None and not handle.running():
                 router.recover_replica(s, r)
                 restarted.append([s, r])
+    # a SIGKILL'd worker leaks its /dev/shm slab ring; the supervisor is
+    # the long-lived process, so the sweep collects orphans even when no
+    # respawn happened this round (e.g. an operator-killed stray)
+    from repro.cluster import shm
+    shm.reap_orphan_slabs()
     return restarted
 
 
@@ -69,6 +80,12 @@ def main(argv=None):
                     help="multi-process mode: this many shard workers "
                          "(x --replicas) as supervised subprocesses over "
                          "the RPC transport (overrides --shards)")
+    ap.add_argument("--transport", default=None,
+                    choices=("inproc", "process", "tcp"),
+                    help="wire selection (default: 'process' when "
+                         "--workers is set, else 'inproc'); 'tcp' runs "
+                         "worker subprocesses on loopback host:port "
+                         "endpoints — the multi-host transport")
     ap.add_argument("--pipeline-depth", type=int, default=None,
                     help="drain-pipeline depth (default: 4 with --workers, "
                          "else 1)")
@@ -112,10 +129,12 @@ def main(argv=None):
                       candidate_cap=128, universe=spec.universe, k=args.k,
                       rerank_chunk=1024)
     root = args.root or tempfile.mkdtemp(prefix="cluster_serve_")
+    transport = args.transport or (
+        "process" if args.workers is not None else "inproc")
+    multiproc = transport in ("process", "tcp")
     shards = args.workers if args.workers is not None else args.shards
-    transport = "process" if args.workers is not None else "inproc"
     depth = (args.pipeline_depth if args.pipeline_depth is not None
-             else (4 if args.workers is not None else 1))
+             else (4 if multiproc else 1))
     router = ClusterRouter(
         cfg, ServeConfig(batch_size=args.batch),
         ClusterConfig(num_shards=shards, num_replicas=args.replicas,
@@ -154,7 +173,7 @@ def main(argv=None):
         }
 
     if args.chaos:
-        if transport == "process":
+        if multiproc:
             # the real drill: SIGKILL the worker process, unannounced
             router.replicas[0][0].handle.sigkill()
         else:
@@ -162,7 +181,7 @@ def main(argv=None):
         router.clear_cache()                               # real dispatches
         d2, i2 = router.query(queries)
         out["chaos_identical"] = bool(np.array_equal(i, i2))
-        if transport == "process":
+        if multiproc:
             # crash-restart: the supervision sweep finds the dead process,
             # respawns it, and recovers it from its own WAL + peers
             out["supervisor_restarted"] = supervise_once(router)

@@ -1,5 +1,9 @@
 """R3 fixture: parsed under the pretend path ``repro/cluster/wal.py``."""
 import pickle                                     # EXPECT r3-wire-protocol
+import multiprocessing.reduction                  # EXPECT r3-wire-protocol
+from multiprocessing import reduction             # EXPECT r3-wire-protocol
+from multiprocessing.connection import Client     # EXPECT r3-wire-protocol
+from multiprocessing import resource_tracker, shared_memory   # legal: §13
 
 import numpy as np
 

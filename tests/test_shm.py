@@ -1,0 +1,245 @@
+"""Shared-memory slab ring + descriptor codec contracts (DESIGN.md §13).
+
+Pinned here:
+  * ``SlabRing`` slot lifecycle: claim/release round-robin, full ring and
+    oversize payloads answer None (socket fallback, never an error),
+    ``reset()`` frees everything a vanished peer still borrowed;
+  * ``StagedPayload`` fan-out refcounting: the slot returns to the ring
+    only when the LAST send retires, and a late ``acquire()`` after
+    retirement raises instead of resurrecting the slot;
+  * the frame codec's shm path end to end: arrays >= threshold cross as
+    descriptors and map back zero-copy bit-identical, sender-released
+    request slots free on the returned callbacks, receiver-released
+    response slots free when the borrowed view dies, and the wire
+    counters attribute every payload byte to the right lane;
+  * descriptor hygiene: a descriptor naming a missing segment raises
+    ``ConnectionError`` (never garbage), malformed index maps are
+    rejected.
+"""
+import gc
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cluster import shm
+from repro.cluster.transport import (KIND_REQUEST, KIND_RESPONSE,
+                                     REL_SENDER, SHM_META_KEY, recv_frame,
+                                     send_frame)
+
+
+def _pair():
+    return socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+
+
+# ------------------------------------------------------------- SlabRing
+
+
+def test_slab_ring_claim_release_cycle():
+    ring = shm.SlabRing(slots=3, slot_bytes=64, tag="t")
+    try:
+        assert ring.free_slots() == 3
+        s0 = ring.stage(16)
+        s1 = ring.stage(64)
+        assert s0 is not None and s1 is not None
+        slot0, off0, view0 = s0
+        slot1, off1, view1 = s1
+        assert slot0 != slot1
+        assert len(view0) == 16 and len(view1) == 64
+        view0[:] = b"a" * 16
+        view1[:] = b"b" * 64
+        view0.release()
+        view1.release()
+        assert ring.free_slots() == 1
+
+        assert ring.stage(65) is None       # oversize: fall back, no raise
+        s2 = ring.stage(1)
+        assert s2 is not None
+        s2[2].release()
+        assert ring.stage(1) is None        # full: fall back, no raise
+        assert ring.free_slots() == 0
+
+        ring.release(slot0)
+        again = ring.stage(8)
+        assert again is not None and again[0] == slot0
+        again[2].release()
+
+        ring.reset()                        # vanished-peer recovery
+        assert ring.free_slots() == 3
+    finally:
+        ring.close()
+    assert ring.name not in shm.list_slabs()
+    assert ring.stage(1) is None            # closed ring: still no raise
+
+
+def test_slab_ring_rejects_bad_slot_counts():
+    with pytest.raises(ValueError, match="slots"):
+        shm.SlabRing(slots=0)
+    with pytest.raises(ValueError, match="slots"):
+        shm.SlabRing(slots=256)
+
+
+def test_staged_payload_refcount_retires_once():
+    ring = shm.SlabRing(slots=2, slot_bytes=64, tag="t")
+    try:
+        slot, off, view = ring.stage(8)
+        view.release()
+        sp = shm.StagedPayload(ring, slot, {"seg": ring.name, "slot": slot})
+        assert sp.acquire()["slot"] == slot  # send #1
+        assert sp.acquire()["slot"] == slot  # send #2 (fan-out peer)
+        sp.release()                         # send #1 retires
+        sp.release()                         # send #2 retires
+        assert ring.free_slots() == 1        # stager's own ref still held
+        sp.release()                         # stager retires: slot frees
+        assert ring.free_slots() == 2
+        with pytest.raises(RuntimeError, match="retired"):
+            sp.acquire()                     # late hedge loser: fails safe
+    finally:
+        ring.close()
+
+
+def test_slab_reader_attach_and_receiver_release():
+    ring = shm.SlabRing(slots=2, slot_bytes=64, tag="t")
+    reader = shm.SlabReader()
+    try:
+        slot, off, view = ring.stage(8)
+        view[:] = bytes(range(8))
+        view.release()
+        got = reader.view(ring.name, off, 8)
+        assert bytes(got) == bytes(range(8))
+        got.release()
+        assert ring.free_slots() == 1
+        reader.release_slot(ring.name, slot)  # rel='r': receiver frees
+        assert ring.free_slots() == 2
+        reader.release_slot("rwshm-1-gone-x", 0)  # dead owner: no raise
+    finally:
+        reader.close()
+        ring.close()
+
+
+# ------------------------------------------------- frame codec shm path
+
+
+def test_frame_shm_staging_roundtrip_and_sender_release():
+    """Request direction (rel='s'): arrays over the threshold cross as
+    descriptors, map back bit-identical and zero-copy, and the slot frees
+    only when the sender runs the returned release callbacks (i.e. when
+    the response retires the request)."""
+    ring = shm.SlabRing(slots=4, slot_bytes=1 << 16, tag="t")
+    reader = shm.SlabReader()
+    a, b = _pair()
+    try:
+        big = np.arange(512, dtype=np.int64).reshape(8, 64)   # staged
+        tiny = np.arange(4, dtype=np.int32)                   # inline
+        before = shm.wire_counters()
+        releases = []
+        t = threading.Thread(
+            target=lambda: releases.extend(send_frame(
+                a, KIND_REQUEST, 9, {"m": "q"}, [big, tiny],
+                shm_tx=ring, shm_threshold=256)))
+        t.start()
+        kind, rid, meta, arrays = recv_frame(b, shm_reader=reader)
+        t.join()
+        assert (kind, rid, meta) == (KIND_REQUEST, 9, {"m": "q"})
+        assert len(arrays) == 2              # re-interleaved in order
+        np.testing.assert_array_equal(arrays[0], big)
+        np.testing.assert_array_equal(arrays[1], tiny)
+        assert arrays[0].dtype == big.dtype and arrays[0].shape == big.shape
+
+        delta = {k: shm.wire_counters().get(k, 0) - before.get(k, 0)
+                 for k in ("shm_payload_tx_bytes", "socket_payload_tx_bytes")}
+        assert delta["shm_payload_tx_bytes"] == big.nbytes
+        assert delta["socket_payload_tx_bytes"] == tiny.nbytes
+
+        # the borrowed view holds the slot; only the sender's callback
+        # (run when the response arrives) frees it
+        del arrays
+        gc.collect()
+        assert ring.free_slots() == 3
+        assert len(releases) == 1
+        releases[0]()
+        assert ring.free_slots() == 4
+    finally:
+        reader.close()
+        a.close()
+        b.close()
+        ring.close()
+
+
+def test_frame_shm_receiver_release_on_view_death():
+    """Response direction (rel='r'): the receiver's borrowed view carries
+    a finalizer that frees the slot when the last reference dies."""
+    ring = shm.SlabRing(slots=2, slot_bytes=1 << 16, tag="t")
+    reader = shm.SlabReader()
+    a, b = _pair()
+    try:
+        payload = np.arange(1024, dtype=np.float64)
+        # a RESPONSE frame: send_frame derives rel='r' from the kind
+        t = threading.Thread(
+            target=send_frame,
+            args=(a, KIND_RESPONSE, 1, {}, [payload]),
+            kwargs={"shm_tx": ring, "shm_threshold": 64})
+        t.start()
+        kind, rid, meta, (got,) = recv_frame(b, shm_reader=reader)
+        t.join()
+        np.testing.assert_array_equal(got, payload)
+        assert ring.free_slots() == 1        # borrowed
+        result = got.sum()                   # downstream consumes + drops
+        del got
+        gc.collect()
+        assert ring.free_slots() == 2        # finalizer freed the slot
+        assert result == payload.sum()
+    finally:
+        reader.close()
+        a.close()
+        b.close()
+        ring.close()
+
+
+def test_frame_shm_full_ring_falls_back_to_socket():
+    ring = shm.SlabRing(slots=1, slot_bytes=1 << 12, tag="t")
+    reader = shm.SlabReader()
+    a, b = _pair()
+    try:
+        claimed = ring.stage(8)              # occupy the only slot
+        assert claimed is not None
+        claimed[2].release()
+        payload = np.arange(256, dtype=np.int64)
+        before = shm.wire_counters()
+        t = threading.Thread(
+            target=send_frame, args=(a, KIND_REQUEST, 2, {}, [payload]),
+            kwargs={"shm_tx": ring, "shm_threshold": 64})
+        t.start()
+        kind, rid, meta, (got,) = recv_frame(b, shm_reader=reader)
+        t.join()
+        np.testing.assert_array_equal(got, payload)  # inline, still exact
+        after = shm.wire_counters()
+        assert (after.get("shm_stage_fallbacks", 0)
+                - before.get("shm_stage_fallbacks", 0)) == 1
+        assert (after.get("socket_payload_tx_bytes", 0)
+                - before.get("socket_payload_tx_bytes", 0)) == payload.nbytes
+    finally:
+        reader.close()
+        a.close()
+        b.close()
+        ring.close()
+
+
+def test_frame_shm_missing_segment_raises_connection_error():
+    a, b = _pair()
+    reader = shm.SlabReader()
+    try:
+        meta = {SHM_META_KEY: [{"i": 0, "seg": "rwshm-1-gone-dead", "slot": 0,
+                                "off": 1, "dt": 0, "sh": [4],
+                                "rel": REL_SENDER}]}
+        t = threading.Thread(
+            target=send_frame, args=(a, KIND_REQUEST, 3, meta, []))
+        t.start()
+        with pytest.raises(ConnectionError):
+            recv_frame(b, shm_reader=reader)
+        t.join()
+    finally:
+        reader.close()
+        a.close()
+        b.close()

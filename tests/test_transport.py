@@ -1,9 +1,13 @@
-"""RPC transport + worker-process contracts (DESIGN.md §10).
+"""RPC transport + worker-process contracts (DESIGN.md §10/§13).
 
 Pinned here:
   * the length-prefixed frame codec round-trips metadata and numpy arrays
     (both the coalesced small-frame path and the vectored large-frame
     path) without pickle and with zero-copy receive views;
+  * the SAME codec over a real TCP loopback socket: partial delivery at
+    every byte split point, >64KB vectored frames, malformed-frame
+    rejection, typed-error round-trip, and connect-time retry while the
+    listener is not bound yet (refused == not-up-yet, not dead);
   * malformed frames (bad magic, implausible length, truncated stream,
     off-whitelist dtypes) surface as ``ConnectionError``/``TypeError``,
     never as garbage arrays;
@@ -11,10 +15,17 @@ Pinned here:
     the matching local class (``ReplicaKilled`` et al.);
   * a real worker subprocess serves bit-identical answers to an
     in-process ``ShardReplica`` over the same seed/key/config, survives
-    SIGKILL via respawn + disk recovery, and the process-transport
-    ``ClusterRouter`` keeps the §7 failover/consistency discipline.
+    SIGKILL via respawn + disk recovery, and the ``ClusterRouter`` keeps
+    the §7 failover/consistency discipline over BOTH multi-process
+    transports (AF_UNIX workers and loopback TCP workers);
+  * the shm fast path (§13): a worker SIGKILL'd mid-query with a mapped
+    slab outstanding leaks nothing — the recovery path reaps the orphan
+    slab, ``/dev/shm`` returns to baseline, answers stay bit-identical.
 """
+import os
 import socket
+import subprocess
+import sys
 import threading
 import time
 
@@ -26,10 +37,11 @@ import pytest
 from repro.cluster import (ClusterConfig, ClusterRouter, OP_DELETE,
                            OP_INSERT, RemoteReplica, ShardReplica,
                            WalRecord)
+from repro.cluster import shm
 from repro.cluster.replica import ReplicaDiverged, ReplicaKilled
 from repro.cluster.transport import (Connection, KIND_REQUEST, KIND_RESPONSE,
-                                     RemoteError, WIRE_DTYPES, recv_frame,
-                                     send_frame)
+                                     RemoteError, WIRE_DTYPES, connect_tcp,
+                                     listen_tcp, recv_frame, send_frame)
 from repro.cluster.worker import pack_records, unpack_records
 from repro.core.index import IndexConfig, build_index, query_index
 from repro.data import ann_synthetic as ds
@@ -169,6 +181,180 @@ def test_frame_rejects_garbage_and_truncation():
     b.close()
 
 
+# ------------------------------------------------ frame codec over TCP
+
+
+def _tcp_pair():
+    """A connected (client, server) AF_INET loopback socket pair."""
+    srv = listen_tcp("127.0.0.1", 0)
+    host, port = srv.getsockname()[:2]
+    client = connect_tcp(host, port, timeout_s=10.0)
+    peer, _ = srv.accept()
+    srv.close()
+    return client, peer
+
+
+def _capture_frame(meta, arrays, kind=KIND_REQUEST, rid=5):
+    """The exact wire bytes of one frame, via a drained socketpair."""
+    a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+    t = threading.Thread(target=send_frame, args=(a, kind, rid, meta, arrays))
+    t.start()
+    try:
+        hdr = bytearray()
+        while len(hdr) < 8:
+            hdr += b.recv(8 - len(hdr))
+        n = int(np.frombuffer(bytes(hdr), np.uint64)[0])
+        body = bytearray()
+        while len(body) < n:
+            body += b.recv(min(1 << 16, n - len(body)))
+    finally:
+        t.join()
+        a.close()
+        b.close()
+    return bytes(hdr) + bytes(body)
+
+
+def test_tcp_partial_recv_at_every_split_point():
+    """``recv_frame`` must reassemble a frame no matter where the kernel
+    splits the stream — pinned by sending the same frame over loopback
+    TCP once per possible byte boundary, each time in two delayed halves
+    (TCP, unlike AF_UNIX socketpairs, genuinely fragments)."""
+    meta = {"method": "query", "n_real": 3}
+    arrays = [np.arange(10, dtype=np.int32),
+              np.array([True, False, True])]
+    blob = _capture_frame(meta, arrays)
+    cuts = range(1, len(blob))
+    client, peer = _tcp_pair()
+    got, errs = [], []
+
+    def reader():
+        try:
+            for _ in cuts:
+                got.append(recv_frame(peer))
+        except Exception as exc:            # surfaced on the main thread
+            errs.append(exc)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        for cut in cuts:
+            client.sendall(blob[:cut])
+            time.sleep(0.001)               # let the first half land alone
+            client.sendall(blob[cut:])
+        t.join(timeout=60)
+    finally:
+        client.close()
+        peer.close()
+    assert not errs, errs
+    assert len(got) == len(cuts)
+    for kind, rid, rmeta, rarrays in got:
+        assert (kind, rid) == (KIND_REQUEST, 5)
+        assert rmeta == meta
+        np.testing.assert_array_equal(rarrays[0], arrays[0])
+        np.testing.assert_array_equal(rarrays[1], arrays[1])
+
+
+def test_tcp_large_vectored_frame():
+    # 720KB payload: far past both 64KB and the coalesce threshold, so the
+    # vectored sendall path crosses many TCP segments
+    big = np.arange(300 * 300, dtype=np.int64).reshape(300, 300)
+    client, peer = _tcp_pair()
+    t = threading.Thread(
+        target=send_frame, args=(client, KIND_REQUEST, 3, {"seq": 1}, [big]))
+    t.start()
+    try:
+        kind, rid, rmeta, (got,) = recv_frame(peer)
+    finally:
+        t.join()
+        client.close()
+        peer.close()
+    assert (kind, rid, rmeta) == (KIND_REQUEST, 3, {"seq": 1})
+    np.testing.assert_array_equal(got, big)
+
+
+def test_tcp_rejects_garbage_and_truncation():
+    client, peer = _tcp_pair()
+    client.sendall(np.uint64(14).tobytes() + b"\x00" * 14)
+    with pytest.raises(ConnectionError, match="magic"):
+        recv_frame(peer)
+    client.close()
+    peer.close()
+
+    client, peer = _tcp_pair()
+    client.sendall(np.uint64(1 << 60).tobytes())
+    with pytest.raises(ConnectionError, match="implausible"):
+        recv_frame(peer)
+    client.close()
+    peer.close()
+
+    client, peer = _tcp_pair()
+    client.sendall(np.uint64(100).tobytes() + b"\x01" * 10)
+    client.close()                          # peer dies mid-frame
+    with pytest.raises(ConnectionError, match="mid-frame"):
+        recv_frame(peer)
+    peer.close()
+
+
+def test_tcp_typed_error_and_echo_roundtrip():
+    for exc, expect in [(ReplicaKilled("gone"), ReplicaKilled),
+                        (ValueError("bad dim"), ValueError),
+                        (ArithmeticError("weird"), RemoteError)]:
+        client, peer = _tcp_pair()
+        t = threading.Thread(
+            target=_serve_one, args=(peer, lambda c, rid, *_: (
+                c.respond_error(rid, exc))))
+        t.start()
+        conn = Connection(client, timeout_s=10.0)
+        with pytest.raises(expect, match=r"\[worker\]"):
+            conn.request("boom")
+        t.join()
+        conn.close()
+        peer.close()
+
+    client, peer = _tcp_pair()
+    t = threading.Thread(
+        target=_serve_one, args=(peer, lambda c, rid, method, meta, arrays: (
+            c.respond(rid, {"method_seen": method, **meta}, arrays))))
+    t.start()
+    conn = Connection(client, timeout_s=10.0)
+    sent = np.arange(5, dtype=np.int32)
+    meta, (got,) = conn.request("echo", {"x": 3}, [sent])
+    assert meta == {"method_seen": "echo", "x": 3}
+    np.testing.assert_array_equal(got, sent)
+    t.join()
+    conn.close()
+    peer.close()
+
+
+def test_tcp_connect_retries_until_listener_binds():
+    """Connection-refused at connect time means the worker has not bound
+    yet — ``connect_tcp`` must retry past it instead of failing the boot."""
+    probe = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()                           # port free: refused until bound
+
+    accepted = []
+
+    def late_listener():
+        time.sleep(0.4)
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind(("127.0.0.1", port))
+        srv.listen(1)
+        peer, _ = srv.accept()
+        accepted.append(peer)
+        srv.close()
+
+    t = threading.Thread(target=late_listener)
+    t.start()
+    client = connect_tcp("127.0.0.1", port, timeout_s=10.0)
+    t.join()
+    assert accepted
+    client.close()
+    accepted[0].close()
+
+
 # ------------------------------------------------- request/response pairing
 
 
@@ -296,19 +482,21 @@ def test_remote_replica_bit_identical_and_sigkill_recovery(
         remote.close()
 
 
+@pytest.mark.parametrize("transport", ["process", "tcp"])
 def test_process_router_matches_flat_and_survives_sigkill(
-        cfg, small, tmp_path):
+        transport, cfg, small, tmp_path):
     """The §7 consistency oracle over real worker processes: S=2 x R=2
     subprocesses answer bit-identically to the flat single-engine path,
     an unannounced SIGKILL mid-traffic fails over with zero drops, and
-    crash-restart + peer catch-up restores full redundancy."""
+    crash-restart + peer catch-up restores full redundancy — over both
+    the AF_UNIX wire and the loopback TCP (multi-host) wire."""
     data, queries = small
     state = build_index(cfg, KEY, jnp.asarray(data))
     fd, fi = map(np.asarray, query_index(cfg, state, jnp.asarray(queries)))
 
     router = ClusterRouter(
         cfg, serve_cfg(),
-        ClusterConfig(num_shards=2, num_replicas=2, transport="process",
+        ClusterConfig(num_shards=2, num_replicas=2, transport=transport,
                       hedge_ms=60000, wal_fsync=False, cache_capacity=0,
                       pipeline_depth=2),
         data, str(tmp_path), key=KEY)
@@ -344,3 +532,107 @@ def test_process_router_matches_flat_and_survives_sigkill(
         np.testing.assert_array_equal(ci3, mi)
     finally:
         router.close()
+
+
+# --------------------------------------------- shm fast path under SIGKILL
+
+
+def _foreign_slabs(baseline):
+    """Slab segments that appeared since ``baseline`` and belong to a
+    DEAD owner — i.e. actual leaks (live workers legitimately hold
+    rings until they exit)."""
+    leaked = []
+    for fn in set(shm.list_slabs()) - baseline:
+        try:
+            pid = int(fn[len(shm.SHM_PREFIX):].split("-")[0])
+        except ValueError:
+            continue
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            leaked.append(fn)
+    return leaked
+
+
+def test_sigkill_under_shm_reaps_slab_and_stays_identical(
+        cfg, small, tmp_path):
+    """The §13 drill: a worker is SIGKILL'd while SLOW mid-query — its
+    request slab slot is claimed, its response never comes — and nothing
+    leaks: the hedged re-issue answers bit-identically, the recovery
+    path reaps the dead worker's orphan ring, and after ``close()`` the
+    ``/dev/shm`` population is exactly the pre-test baseline."""
+    data, queries = small
+    shm.reap_orphan_slabs()                 # start from a clean room
+    baseline = set(shm.list_slabs())
+    router = ClusterRouter(
+        cfg, serve_cfg(),
+        ClusterConfig(num_shards=2, num_replicas=2, transport="process",
+                      hedge_ms=200.0, wal_fsync=False, cache_capacity=0,
+                      shm_threshold_bytes=64),
+        data, str(tmp_path), key=KEY)
+    try:
+        d0, i0 = router.query(queries)      # warm: slabs mapped both ways
+
+        # victim hangs well past the hedge deadline with the staged
+        # request slot outstanding; the peer's hedged answer wins
+        victim = router.replicas[0][0]
+        victim.slow_ms = 30000.0
+        router._rr[0] = 0                   # victim is preferred next
+        done = threading.Event()
+
+        def kill_mid_query():
+            # fires while the victim sleeps inside its handler — the
+            # mapped slab (and its in-flight slot borrow) dies with it
+            time.sleep(0.6)
+            victim.handle.sigkill()
+            done.set()
+
+        killer = threading.Thread(target=kill_mid_query)
+        killer.start()
+        d1, i1 = router.query(queries)      # hedge fires at 200ms
+        killer.join()
+        assert done.is_set()
+        np.testing.assert_array_equal(d1, d0)
+        np.testing.assert_array_equal(i1, i0)
+        assert router.summary()["hedged_batches"] >= 1
+
+        # recovery respawns the worker AND reaps any orphaned ring the
+        # SIGKILL left behind; no dead-owner segment may survive it
+        router.recover_replica(0, 0)
+        assert _foreign_slabs(baseline) == []
+
+        d2, i2 = router.query(queries)
+        np.testing.assert_array_equal(d2, d0)
+        np.testing.assert_array_equal(i2, i0)
+    finally:
+        router.close()
+    # descriptor-leak oracle: the /dev/shm delta is exactly zero
+    shm.reap_orphan_slabs()
+    assert set(shm.list_slabs()) == baseline
+
+
+def test_reap_orphan_slabs_spares_live_owners(tmp_path):
+    """The reaper unlinks dead-owner segments only: a ring owned by this
+    live process survives, a hand-planted segment named for a dead pid
+    goes away."""
+    ours = shm.SlabRing(slots=2, slot_bytes=64, tag="keep")
+    # a real dead pid: a subprocess that has already exited
+    probe = subprocess.run([sys.executable, "-c",
+                            "import os; print(os.getpid())"],
+                           capture_output=True, text=True, check=True)
+    dead_pid = int(probe.stdout)
+    orphan = f"{shm.SHM_PREFIX}{dead_pid}-wtx-deadbeef"
+    path = os.path.join(shm.SHM_DIR, orphan)
+    with open(path, "wb") as f:
+        f.write(b"\x00" * 64)
+    try:
+        reaped = shm.reap_orphan_slabs()
+        assert orphan in reaped
+        assert not os.path.exists(path)
+        assert ours.name in shm.list_slabs()
+        assert ours.free_slots() == 2       # untouched by the sweep
+    finally:
+        ours.close()
+        if os.path.exists(path):
+            os.unlink(path)
+    assert ours.name not in shm.list_slabs()
